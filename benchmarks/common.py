@@ -1,0 +1,36 @@
+"""Shared benchmark config: scale knob + CSV emit helper.
+
+REPRO_BENCH_SCALE=tiny   (default) minutes on a laptop CPU — reduced
+                         encoder, short schedules; demonstrates orderings.
+REPRO_BENCH_SCALE=paper  full RoBERTa-base shapes + min(10000,|train|)
+                         examples — the paper's actual grid (hours).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "tiny")
+
+if SCALE == "paper":
+    KW = dict(reduced=False, train_steps=1500, warmup_steps=600, eval_batches=30,
+              batch=16, seq=128)
+else:
+    KW = dict(reduced=True, train_steps=50, warmup_steps=30, eval_batches=6,
+              batch=16, seq=32)
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, n: int = 3):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    return out, (time.time() - t0) / n * 1e6

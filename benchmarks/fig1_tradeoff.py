@@ -1,0 +1,37 @@
+"""Paper Figure 1: trainable-parameter count vs downstream performance.
+
+Emits the (params, metric) points for MNLI and MRPC across all methods —
+the paper's 'QR-LoRA occupies the upper-left corner' scatter."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KW, emit
+from repro.benchlib import run_glue_method
+
+POINTS = [
+    ("ft", dict()),
+    ("lora", dict(rank=2)),
+    ("svd_lora", dict(rank=2)),
+    ("qr_lora", dict(tau=0.5, targets=("wq",), layers="last4")),
+    ("qr_lora", dict(tau=0.5, targets=("wq", "wv"), layers="last4")),
+    ("qr_lora", dict(tau=0.5, targets=("wo",), layers="all")),
+]
+
+
+def main():
+    print("# Figure 1 — parameter/performance trade-off")
+    for task in ("mnli", "mrpc"):
+        for mode, kw in POINTS:
+            t0 = time.time()
+            r = run_glue_method(task, mode, seed=0, **KW, **kw)
+            us = (time.time() - t0) * 1e6 / max(KW["train_steps"], 1)
+            tag = "+".join(kw.get("targets", ("all",)))
+            emit(
+                f"fig1:{task}:{mode}:{tag}", us,
+                f"params={r['trainable']};{r['metric_name']}={r['metric']:.4f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

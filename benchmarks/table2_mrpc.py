@@ -1,0 +1,34 @@
+"""Paper Table 2: MRPC — accuracy + F1 across the same configuration grid."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KW, emit
+from repro.benchlib import run_glue_method
+
+CONFIGS = [
+    ("ft", dict()),
+    ("lora", dict(rank=2)),
+    ("svd_lora", dict(rank=2)),
+    ("qr_lora", dict(tau=0.5, targets=("wo",), layers="all")),
+    ("qr_lora", dict(tau=0.7, targets=("wo",), layers="all")),
+    ("qr_lora", dict(tau=0.5, targets=("wo",), layers="last4")),
+    ("qr_lora", dict(tau=0.5, targets=("wq", "wv"), layers="last4")),
+]
+
+
+def main():
+    print("# Table 2 — MRPC config sweep (metric: F1)")
+    for mode, kw in CONFIGS:
+        t0 = time.time()
+        r = run_glue_method("mrpc", mode, seed=0, **KW, **kw)
+        us = (time.time() - t0) * 1e6 / max(KW["train_steps"], 1)
+        tag = f"tau={kw.get('tau','-')}:{'+'.join(kw.get('targets', ('all',)))}:{kw.get('layers','-')}"
+        emit(
+            f"table2_mrpc:{mode}:{tag}", us,
+            f"f1={r['metric']:.4f};acc={r['accuracy']:.4f};trainable={r['trainable']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 3: method comparison across all 8 GLUE-like tasks.
+
+QR-LoRA1 = (Wq,Wv, last4, τ=0.5); QR-LoRA2 = (Wq, last4, τ=0.5);
+vs SVD-LoRA (r=2,k=1,α=2), LoRA (r=2), FT."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KW, emit
+from repro.benchlib import run_glue_method
+from repro.data import GLUE_TASKS
+
+METHODS = [
+    ("qr_lora1", "qr_lora", dict(tau=0.5, targets=("wq", "wv"), layers="last4")),
+    ("qr_lora2", "qr_lora", dict(tau=0.5, targets=("wq",), layers="last4")),
+    ("svd_lora", "svd_lora", dict(rank=2)),
+    ("lora", "lora", dict(rank=2)),
+    ("ft", "ft", dict()),
+]
+
+
+def main():
+    print("# Table 3 — 8-task GLUE comparison")
+    for disp, mode, kw in METHODS:
+        for task in GLUE_TASKS:
+            t0 = time.time()
+            r = run_glue_method(task, mode, seed=0, **KW, **kw)
+            us = (time.time() - t0) * 1e6 / max(KW["train_steps"], 1)
+            emit(
+                f"table3_glue:{disp}:{task}", us,
+                f"{r['metric_name']}={r['metric']:.4f};trainable={r['trainable']}",
+            )
+
+
+if __name__ == "__main__":
+    main()

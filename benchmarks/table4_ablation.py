@@ -1,0 +1,34 @@
+"""Paper Table 4: training-set-size ablation on MNLI (LoRA / QR-LoRA / FT).
+
+Reproduces the paper's regime finding: FT wins in the low-data regime;
+QR-LoRA catches up / overtakes as data grows."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KW, SCALE, emit
+from repro.benchlib import run_glue_method
+
+SIZES = [2000, 10000, 50000] if SCALE == "paper" else [128, 512, 2048]
+METHODS = [
+    ("lora", dict(rank=2)),
+    ("qr_lora", dict(tau=0.5, targets=("wq", "wv"), layers="last4")),
+    ("ft", dict()),
+]
+
+
+def main():
+    print("# Table 4 — MNLI data-size ablation")
+    for size in SIZES:
+        for mode, kw in METHODS:
+            t0 = time.time()
+            r = run_glue_method("mnli", mode, seed=0, train_limit=size, **KW, **kw)
+            us = (time.time() - t0) * 1e6 / max(KW["train_steps"], 1)
+            emit(
+                f"table4_ablation:{mode}:n={size}", us,
+                f"acc={r['metric']:.4f};trainable={r['trainable']}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example (prefill + decode loop) through the production
+serve step functions — the same functions the multi-pod dry-run lowers at
+decode_32k / long_500k shapes.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", "16",
+        "--gen-len", str(args.gen_len),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.benchlib.glue_runner import run_glue_method  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager, save_pytree, restore_pytree  # noqa: F401
+from repro.checkpoint.reshard import reshard_to_mesh  # noqa: F401

@@ -1,0 +1,29 @@
+"""Elastic restart: re-lay a restored pytree onto a (possibly different) mesh.
+
+Checkpoints store logical arrays; sharding is a property of the *run*, not
+the data.  ``reshard_to_mesh`` re-derives the partition specs from
+``repro.sharding.rules`` under the new mesh and ``device_put``s every leaf —
+this is what lets a job checkpointed on a 2-pod mesh restart on 1 pod (or a
+degraded 15×16 slice) without conversion tooling.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.sharding import rules as shrules
+
+Pytree = Any
+
+
+def reshard_to_mesh(tree: Pytree, mesh, *, fsdp: bool = False) -> Pytree:
+    with shrules.axis_rules(mesh, fsdp=fsdp):
+        shardings = shrules.param_sharding_rules(
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+            )
+        )
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )

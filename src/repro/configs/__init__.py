@@ -1,0 +1,2 @@
+from repro.configs.base import AdapterConfig, ModelConfig, ShapeConfig, SHAPES, shape_applicable  # noqa: F401
+from repro.configs.registry import ARCHS, all_archs, get_config, get_reduced  # noqa: F401

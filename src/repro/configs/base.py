@@ -1,0 +1,256 @@
+"""Config dataclasses and registries for the repro framework.
+
+Every assigned architecture gets a module in ``repro/configs/`` that builds a
+:class:`ModelConfig` with the exact published dimensions, plus a
+``reduced()`` variant used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Adapter (PEFT) configuration — the paper's contribution lives here.
+# ---------------------------------------------------------------------------
+
+ADAPTER_MODES = ("none", "ft", "lora", "svd_lora", "qr_lora")
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    """Configuration of the PEFT adapter attached to a model.
+
+    mode:
+      none      — no adapters, nothing trainable except what the caller says.
+      ft        — full fine-tuning (no adapters, everything trainable).
+      lora      — standard LoRA, ΔW = B·A·(α/r); A, B trainable.
+      svd_lora  — LoRA with B, A initialized from top-k singular vectors.
+      qr_lora   — the paper: pivoted-QR basis, only diagonal λ trainable.
+    """
+
+    mode: str = "qr_lora"
+    # Projections to adapt, by canonical name ("wq", "wk", "wv", "wo",
+    # "w_gate", "w_up", "w_down", "mamba_in", "mamba_out", ...).
+    targets: Tuple[str, ...] = ("wq", "wv")
+    # Which layers get adapters: "all", "last4", or an explicit index tuple.
+    layers: str | Tuple[int, ...] = "last4"
+    # Rank selection for qr_lora: "energy" (paper eq. 4) or "magnitude"
+    # (paper §4.1: count of |R_ii| > τ·|R_11|), or "fixed".
+    rank_policy: str = "energy"
+    tau: float = 0.5
+    # Static rank cap — storage rank of the factors.  Real selected ranks are
+    # padded up to this with masked (frozen-at-zero) λ entries so shapes stay
+    # static across steps / checkpoints / elastic restarts.
+    rank_cap: int = 160
+    # lora / svd_lora:
+    rank: int = 2
+    alpha: float = 2.0
+    svd_k: int = 1
+    # svd_lora: subtract the initialized component from W0 so the effective
+    # weight is unchanged at init (PiSSA-style).  The paper is ambiguous; this
+    # keeps init-loss identical across methods.
+    svd_subtract_init: bool = True
+
+    def replace(self, **kw) -> "AdapterConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 → d_model // n_heads
+
+    # Attention flavour
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    causal: bool = True
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE FFN every k-th layer (jamba: 2); 1 → all layers
+    capacity_factor: float = 1.25
+
+    # Hybrid (jamba): layer group of ``hybrid_period`` layers with one
+    # attention layer at index ``hybrid_attn_index`` and Mamba elsewhere.
+    hybrid_period: int = 0
+    hybrid_attn_index: int = 0
+
+    # Mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # xLSTM: pattern of block kinds, cycled over layers ("m" = mLSTM,
+    # "s" = sLSTM).
+    xlstm_pattern: str = "ms"
+
+    # VLM: one cross-attention layer every ``cross_attn_every`` layers.
+    cross_attn_every: int = 0
+    n_image_tokens: int = 0
+    d_image: int = 0
+
+    # Encoder (paper's RoBERTa-style model)
+    is_encoder: bool = False
+    n_classes: int = 0
+    max_position: int = 0
+
+    # Numerics / execution
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    remat: bool = True
+    scan_layers: bool = True
+    attn_impl: str = "xla"  # "xla" | "pallas" (TPU real runs)
+    logits_dtype: str = "float32"
+
+    # Distribution
+    fsdp: bool = False  # additionally shard params/opt over the data axis
+    microbatches: int = 1  # gradient accumulation steps per train step
+    # §Perf hillclimb levers (default off = paper-faithful baseline):
+    # decode with replicated activations + fully-sharded ("weight
+    # stationary") params — removes the per-step FSDP weight all-gathers.
+    decode_weight_stationary: bool = False
+    # pure data-parallel sharding (batch over every mesh axis, weights
+    # replicated) — optimal for QR-LoRA PEFT of small models, where the
+    # frozen base needs no gradient all-reduce.
+    dp_only: bool = False
+    # attention score dtype for the XLA path ("float32" default; "bfloat16"
+    # halves S² HBM traffic — the Pallas flash kernel removes it entirely
+    # on real TPU).
+    attn_scores_dtype: str = "float32"
+
+    adapter: AdapterConfig = field(default_factory=AdapterConfig)
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        assert self.n_heads % self.n_kv_heads == 0, (
+            f"{self.name}: n_heads={self.n_heads} not a multiple of "
+            f"n_kv_heads={self.n_kv_heads}"
+        )
+        assert self.adapter.mode in ADAPTER_MODES
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.hybrid_period > 0
+
+    @property
+    def group_size(self) -> int:
+        """Layers per scan group (hybrid/vlm/xlstm patterns scan groups)."""
+        if self.hybrid_period:
+            return self.hybrid_period
+        if self.cross_attn_every:
+            return self.cross_attn_every
+        if self.family == "ssm":
+            return len(self.xlstm_pattern)
+        return 1
+
+    def adapted_layer_mask(self) -> Tuple[bool, ...]:
+        """Which layer indices carry adapters (paper: 'last 4' / 'all 12')."""
+        sel = self.adapter.layers
+        n = self.n_layers
+        if sel == "all":
+            return tuple(True for _ in range(n))
+        if isinstance(sel, str) and sel.startswith("last"):
+            k = int(sel[4:])
+            return tuple(i >= n - k for i in range(n))
+        return tuple(i in sel for i in range(n))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (analytic; used for roofline MODEL_FLOPS) -------
+    def param_count(self, active_only: bool = False) -> int:
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        dh, H, KV = self.d_head, self.n_heads, self.n_kv_heads
+        attn = d * H * dh + 2 * d * KV * dh + H * dh * d
+        dense_ffn = 3 * d * ff  # gated (gate, up, down)
+        n_attn_layers = self.n_layers
+        n_mamba_layers = 0
+        if self.is_hybrid:
+            n_groups = self.n_layers // self.hybrid_period
+            n_attn_layers = n_groups
+            n_mamba_layers = self.n_layers - n_groups
+        mamba = 0
+        if n_mamba_layers:
+            d_in = self.mamba_expand * d
+            mamba = (
+                2 * d * d_in  # in proj (x and gate)
+                + d_in * self.mamba_d_conv
+                + d_in * (2 * self.mamba_d_state + 1)  # B, C, dt projections
+                + d_in * d  # out proj
+            )
+        if self.family == "ssm":  # xlstm: qkv+out per block + up/down gates
+            attn = 4 * d * d + 2 * d * 4 * d
+            dense_ffn = 0
+        total = V * d * 2  # embed + unembed
+        per_layer_ffn = 0
+        if self.is_moe:
+            n_moe_layers = len(
+                [i for i in range(self.n_layers) if (i % self.moe_every) == self.moe_every - 1]
+            ) if self.moe_every > 1 else self.n_layers
+            n_dense_ffn = self.n_layers - n_moe_layers
+            per_layer_ffn = 0
+            total += n_moe_layers * (self.n_experts * dense_ffn + d * self.n_experts)
+            total += n_dense_ffn * dense_ffn
+        else:
+            per_layer_ffn = dense_ffn if ff else 0
+        total += n_attn_layers * attn + n_mamba_layers * mamba
+        total += self.n_layers * per_layer_ffn
+        if active_only and self.is_moe:
+            # replace expert params with top-k active ones
+            n_moe_layers = (
+                self.n_layers // self.moe_every if self.moe_every > 1 else self.n_layers
+            )
+            total -= n_moe_layers * (self.n_experts - self.experts_per_token) * dense_ffn
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Families whose decode path is sub-quadratic in history (recurrent state or
+# hybrid with O(S) attention reads only in a 1/8 fraction of layers).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True

@@ -1,0 +1,49 @@
+"""Architecture registry: ``get_config(name)`` / ``get_reduced(name)``.
+
+Each module defines ``config()`` with the exact published dimensions and
+``reduced()`` — a same-family shrunken variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+ARCHS: List[str] = [
+    "moonshot_v1_16b_a3b",
+    "mixtral_8x22b",
+    "qwen2_0_5b",
+    "qwen3_14b",
+    "smollm_135m",
+    "qwen2_5_32b",
+    "llama_3_2_vision_11b",
+    "jamba_1_5_large_398b",
+    "musicgen_medium",
+    "xlstm_125m",
+]
+
+EXTRA = ["roberta_base"]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS + EXTRA}
+
+
+def _norm(name: str) -> str:
+    n = name.replace("-", "_").replace(".", "_")
+    return _ALIASES.get(name, n)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    cfg = mod.config()
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def get_reduced(name: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    cfg = mod.reduced()
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def all_archs() -> List[str]:
+    return list(ARCHS)

@@ -1,0 +1,253 @@
+"""Unified PEFT adapter API.
+
+One runtime formula serves every mode::
+
+    y = x · W  +  ((x · B) * λ) · A · scale
+
+* qr_lora  — B, A frozen pivoted-QR factors; λ trainable (init 0).
+* lora     — B, A trainable; λ frozen at 1; scale = α/r.
+* svd_lora — B, A trainable from SVD init; λ frozen at 1; scale = α/r.
+* ft/none  — no adapters (``adp is None``): y = x · W.
+
+Adapters are stored *inside* the stacked layer pytree under
+``params["layers"]["adapters"][<proj>]`` so `jax.lax.scan` slices the
+per-layer factors naturally.  Trainability is expressed as a boolean pytree
+mask (:func:`trainable_mask`) which drives gradient partitioning
+(:func:`partition` / :func:`merge`) — frozen leaves never receive gradients
+or optimizer state, which is what makes a 398B QR-LoRA fine-tune cheap.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AdapterConfig, ModelConfig
+from repro.core.lora import lora_init_stacked, svd_lora_init_stacked
+from repro.core.qr_lora import qr_lora_init_stacked
+
+Pytree = Any
+
+
+def adapter_scale(cfg: AdapterConfig) -> float:
+    if cfg.mode in ("lora", "svd_lora"):
+        return cfg.alpha / cfg.rank
+    return 1.0
+
+
+def layer_selection_mask(sel, n: int) -> Tuple[bool, ...]:
+    """Which of the n stacked rows get adapters ('all' / 'lastK' / indices).
+
+    The selection indexes the *stacked* dimension of each projection (layers
+    for dense models, scan groups for grouped families)."""
+    if sel == "all":
+        return tuple(True for _ in range(n))
+    if isinstance(sel, str) and sel.startswith("last"):
+        k = int(sel[4:])
+        return tuple(i >= n - k for i in range(n))
+    return tuple(i in sel for i in range(n))
+
+
+def adapted_matmul(
+    x: jax.Array,
+    W: jax.Array,
+    adp: Optional[Dict[str, jax.Array]],
+    scale: float = 1.0,
+    kernel: str = "xla",
+) -> jax.Array:
+    """``y = x·W + ((x·B)*λ)·A·scale`` — the fused adapter matmul.
+
+    ``kernel="pallas"`` routes through the Pallas TPU kernel (see
+    ``repro/kernels/qrlora_matmul.py``); "xla" is the portable path used for
+    distributed lowering.
+    """
+    if adp is None:
+        return x @ W
+    if kernel == "pallas":
+        from repro.kernels import ops as _kops
+
+        return _kops.qrlora_matmul(
+            x, W, adp["B"], adp["A"], adp["lam"], scale=scale
+        )
+    y = x @ W
+    lam = adp["lam"].astype(x.dtype)
+    low = ((x @ adp["B"]) * lam) @ adp["A"]
+    return y + low * scale
+
+
+def merge_adapter(
+    W: jax.Array, adp: Optional[Dict[str, jax.Array]], scale: float = 1.0
+) -> jax.Array:
+    """Fold the adapter into the weight (serving fast-path)."""
+    if adp is None:
+        return W
+    lam = adp["lam"].astype(W.dtype)
+    return W + ((adp["B"] * lam[..., None, :]) @ adp["A"]) * scale
+
+
+# ---------------------------------------------------------------------------
+# Initialization over a model's stacked projections
+# ---------------------------------------------------------------------------
+
+
+def init_adapters(
+    key: jax.Array,
+    cfg: ModelConfig,
+    stacked: Dict[str, jax.Array],
+    dtype=jnp.bfloat16,
+) -> Tuple[Dict[str, Dict[str, jax.Array]], Dict[str, jax.Array]]:
+    """Build adapters for every target projection.
+
+    ``stacked`` maps projection name → (n_layers, d_in, d_out) weight.
+    Returns ``(adapters, updated_weights)`` — weights change only for
+    svd_lora with subtract-init.
+    """
+    acfg = cfg.adapter
+    adapters: Dict[str, Dict[str, jax.Array]] = {}
+    new_weights = dict(stacked)
+    if acfg.mode in ("none", "ft"):
+        return adapters, new_weights
+    # every entry of ``stacked`` gets an adapter (callers pre-filter targets)
+    for i, (name, W) in enumerate(sorted(stacked.items())):
+        n_layers = W.shape[0]
+        mask = layer_selection_mask(acfg.layers, n_layers)
+        if acfg.mode == "qr_lora":
+            adapters[name] = qr_lora_init_stacked(W, mask, acfg, dtype)
+        elif acfg.mode == "lora":
+            adapters[name] = lora_init_stacked(
+                jax.random.fold_in(key, i), W, mask, acfg, dtype
+            )
+        elif acfg.mode == "svd_lora":
+            adapters[name], new_weights[name] = svd_lora_init_stacked(
+                W, mask, acfg, dtype
+            )
+    return adapters, new_weights
+
+
+def dryrun_adapters(
+    cfg: ModelConfig, stacked_shapes: Dict[str, Tuple[int, int, int]], dtype=jnp.bfloat16
+) -> Dict[str, Dict[str, jax.ShapeDtypeStruct]]:
+    """ShapeDtypeStruct stand-ins for the dry-run path (no QR executed)."""
+    acfg = cfg.adapter
+    if acfg.mode in ("none", "ft"):
+        return {}
+    out = {}
+    for name in stacked_shapes:
+        n_layers, d_in, d_out = stacked_shapes[name]
+        cap = (
+            min(acfg.rank_cap, d_in, d_out)
+            if acfg.mode == "qr_lora"
+            else acfg.rank
+        )
+        out[name] = {
+            "B": jax.ShapeDtypeStruct((n_layers, d_in, cap), dtype),
+            "A": jax.ShapeDtypeStruct((n_layers, cap, d_out), dtype),
+            "lam": jax.ShapeDtypeStruct((n_layers, cap), jnp.float32),
+            "ranks": jax.ShapeDtypeStruct((n_layers,), jnp.int32),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trainability masks and partitioning
+# ---------------------------------------------------------------------------
+
+_QR_TRAINABLE = ("lam",)
+_LORA_TRAINABLE = ("A", "B")
+
+
+def _is_adapter_leaf_trainable(mode: str, leaf_name: str) -> bool:
+    if mode == "qr_lora":
+        return leaf_name in _QR_TRAINABLE
+    if mode in ("lora", "svd_lora"):
+        return leaf_name in _LORA_TRAINABLE
+    return False
+
+
+def trainable_mask(params: Pytree, cfg: ModelConfig, extra_trainable=()) -> Pytree:
+    """Boolean pytree: which leaves receive gradients / optimizer state.
+
+    ``extra_trainable`` — path substrings always trainable (e.g. a fresh
+    classification head during PEFT, as in the paper's GLUE setup).
+    """
+    mode = cfg.adapter.mode
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def decide(path) -> bool:
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        spath = "/".join(str(k) for k in keys)
+        if any(s in spath for s in extra_trainable):
+            return True
+        if mode == "ft":
+            return "adapters" not in spath and "ranks" not in spath
+        if "adapters" in spath:
+            leaf = str(keys[-1])
+            return _is_adapter_leaf_trainable(mode, leaf)
+        return False
+
+    mask_flat = [decide(path) for path, _ in flat]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, mask_flat)
+
+
+def partition(params: Pytree, mask: Pytree) -> Tuple[Pytree, Pytree]:
+    """Split params into (trainable, frozen); non-selected side holds None."""
+    train = jax.tree_util.tree_map(lambda p, m: p if m else None, params, mask)
+    frozen = jax.tree_util.tree_map(lambda p, m: None if m else p, params, mask)
+    return train, frozen
+
+
+def merge(trainable: Pytree, frozen: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda t, f: t if f is None else f,
+        trainable,
+        frozen,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def count_params(tree: Pytree) -> int:
+    return sum(
+        x.size for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "size")
+    )
+
+
+def count_trainable_params(params: Pytree, cfg: ModelConfig, extra_trainable=()) -> int:
+    """Paper-style trainable-parameter count.
+
+    For qr_lora the padded λ entries are not real parameters — count the
+    true selected ranks from the ``ranks`` metadata instead of λ's size.
+    """
+    mask = trainable_mask(params, cfg, extra_trainable)
+    mode = cfg.adapter.mode
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    mask_flat = jax.tree_util.tree_leaves(mask)
+    # walk adapters to find rank metadata
+    rank_by_proj = {}
+
+    def visit(node, path=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "adapters" and isinstance(v, dict):
+                    for proj, adp in v.items():
+                        if isinstance(adp, dict) and "ranks" in adp:
+                            rank_by_proj[path + "/" + proj] = int(
+                                jnp.sum(adp["ranks"])
+                            )
+                else:
+                    visit(v, path + "/" + str(k))
+
+    visit(params)
+    for (path, leaf), m in zip(flat, mask_flat):
+        if not m:
+            continue
+        spath = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        if mode == "qr_lora" and spath.endswith("lam") and "adapters" in spath:
+            proj = spath.split("/")[-2]
+            matches = [v for k, v in rank_by_proj.items() if k.endswith("/" + proj)]
+            total += matches[0] if matches else leaf.size
+        else:
+            total += leaf.size
+    return total

@@ -1,0 +1,75 @@
+"""Baselines from the paper: standard LoRA and SVD-LoRA.
+
+Both share the QR-LoRA runtime formula ``y = x·W + ((x·B)·λ)·A·scale`` with
+λ frozen at 1 — only the init and the trainable set differ:
+
+* LoRA (Hu et al., 2022): A ~ N(0, 1/r), B = 0 (ΔW = 0 at init);
+  A and B trainable; scale = α/r.
+* SVD-LoRA (paper §4.1): B, A initialized from the top-k singular vectors of
+  W0, zero-padded to rank r, scale = α/r.  With ``svd_subtract_init`` the
+  initialized component is removed from W0 (PiSSA-style) so the effective
+  weight — and hence the initial loss — is unchanged at step 0.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdapterConfig
+
+
+def lora_init_stacked(
+    key: jax.Array,
+    W_stacked: jax.Array,
+    layer_mask: Tuple[bool, ...],
+    cfg: AdapterConfig,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    n_layers, d_in, d_out = W_stacked.shape
+    r = cfg.rank
+    mask = jnp.asarray(layer_mask, jnp.float32)[:, None, None]
+    a = jax.random.normal(key, (n_layers, r, d_out), jnp.float32) / np.sqrt(r)
+    return {
+        "B": jnp.zeros((n_layers, d_in, r), dtype),
+        "A": (a * mask).astype(dtype),
+        "lam": jnp.ones((n_layers, r), jnp.float32) * mask[:, :, 0],
+        "ranks": jnp.asarray([r if m else 0 for m in layer_mask], jnp.int32),
+    }
+
+
+def svd_lora_init_stacked(
+    W_stacked: jax.Array,
+    layer_mask: Tuple[bool, ...],
+    cfg: AdapterConfig,
+    dtype=jnp.bfloat16,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Returns (adapter, possibly-updated W_stacked)."""
+    n_layers, d_in, d_out = W_stacked.shape
+    r, k = cfg.rank, min(cfg.svd_k, cfg.rank)
+    scale = cfg.alpha / cfg.rank
+    B = np.zeros((n_layers, d_in, r), np.float32)
+    A = np.zeros((n_layers, r, d_out), np.float32)
+    W_new = np.asarray(W_stacked, np.float32).copy()
+    for l in range(n_layers):
+        if not layer_mask[l]:
+            continue
+        U, S, Vt = np.linalg.svd(W_new[l], full_matrices=False)
+        sq = np.sqrt(S[:k])
+        B[l, :, :k] = U[:, :k] * sq[None, :]
+        A[l, :k, :] = sq[:, None] * Vt[:k, :]
+        if cfg.svd_subtract_init:
+            W_new[l] -= scale * (B[l, :, :k] @ A[l, :k, :])
+    return (
+        {
+            "B": jnp.asarray(B, dtype),
+            "A": jnp.asarray(A, dtype),
+            "lam": jnp.asarray(
+                [[1.0] * r if m else [0.0] * r for m in layer_mask], jnp.float32
+            ),
+            "ranks": jnp.asarray([r if m else 0 for m in layer_mask], jnp.int32),
+        },
+        jnp.asarray(W_new, W_stacked.dtype),
+    )

@@ -1,0 +1,175 @@
+"""Column-pivoted Householder QR decomposition.
+
+The paper builds the adapter basis from ``W0 · P = Q · R`` where column
+pivoting orders the diagonal of R by magnitude, ``|R11| ≥ |R22| ≥ …`` —
+an importance ranking of the orthonormal directions in Q.
+
+``jnp.linalg.qr`` has no pivoting, so we implement blocked-free Householder
+QR with greedy column pivoting:
+
+* a pure-JAX version (:func:`qr_pivoted`) — jittable, runs on any backend;
+  used at adapter-init time on real runs;
+* a NumPy reference (:func:`qr_pivoted_np`) mirroring the same algorithm —
+  the oracle for unit/property tests (cross-checked against
+  ``scipy.linalg.qr(pivoting=True)`` where available).
+
+TPU note (see DESIGN.md §3): the pivot choice is inherently sequential, so
+this is a one-time init-stage computation; the per-step trailing-matrix
+update is a rank-1 GEMM that XLA vectorizes on the VPU/MXU.  We deliberately
+recompute trailing column norms each step (same asymptotic cost as the
+update itself) instead of norm downdating — more robust and branch-free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PivotedQR(NamedTuple):
+    Q: jax.Array  # (L, K) orthonormal columns
+    R: jax.Array  # (K, M) upper triangular, diag ≥ 0 and non-increasing
+    perm: jax.Array  # (M,) int32 — W[:, perm] ≈ Q @ R
+
+
+@functools.partial(jax.jit, static_argnames=("num_reflectors",))
+def qr_pivoted(W: jax.Array, num_reflectors: int | None = None) -> PivotedQR:
+    """Column-pivoted reduced QR of ``W`` (L × M), fp32 internally."""
+    W = jnp.asarray(W, jnp.float32)
+    L, M = W.shape
+    K = min(L, M) if num_reflectors is None else min(num_reflectors, L, M)
+
+    rows = jnp.arange(L)
+    cols = jnp.arange(M)
+
+    def step(k, carry):
+        A, V, betas, perm = carry
+        # --- pivot: trailing column with the largest ||A[k:, j]|| ----------
+        row_mask = (rows >= k).astype(A.dtype)[:, None]
+        sq = jnp.sum((A * row_mask) ** 2, axis=0)
+        sq = jnp.where(cols >= k, sq, -jnp.inf)
+        p = jnp.argmax(sq)
+        # swap columns k <-> p (and perm entries)
+        ck = jax.lax.dynamic_index_in_dim(A, k, axis=1, keepdims=False)
+        cp = jax.lax.dynamic_index_in_dim(A, p, axis=1, keepdims=False)
+        A = jax.lax.dynamic_update_index_in_dim(A, cp, k, axis=1)
+        A = jax.lax.dynamic_update_index_in_dim(A, ck, p, axis=1)
+        pk = jax.lax.dynamic_index_in_dim(perm, k, keepdims=False)
+        pp = jax.lax.dynamic_index_in_dim(perm, p, keepdims=False)
+        perm = jax.lax.dynamic_update_index_in_dim(perm, pp, k, axis=0)
+        perm = jax.lax.dynamic_update_index_in_dim(perm, pk, p, axis=0)
+        # --- Householder reflector annihilating A[k+1:, k] ------------------
+        x = jnp.where(rows >= k, jax.lax.dynamic_index_in_dim(A, k, axis=1, keepdims=False), 0.0)
+        normx = jnp.linalg.norm(x)
+        xk = jax.lax.dynamic_index_in_dim(x, k, keepdims=False)
+        sign = jnp.where(xk >= 0, 1.0, -1.0)
+        alpha = -sign * normx
+        v = x - alpha * (rows == k).astype(x.dtype)
+        vnorm2 = jnp.dot(v, v)
+        beta = jnp.where(vnorm2 > 1e-30, 2.0 / vnorm2, 0.0)
+        # --- apply H = I - beta v vᵀ to the trailing matrix ------------------
+        w = beta * (v @ A)  # (M,)
+        A = A - jnp.outer(v, w)
+        V = jax.lax.dynamic_update_index_in_dim(V, v, k, axis=0)
+        betas = jax.lax.dynamic_update_index_in_dim(betas, beta, k, axis=0)
+        return A, V, betas, perm
+
+    A0 = W
+    V0 = jnp.zeros((K, L), jnp.float32)
+    b0 = jnp.zeros((K,), jnp.float32)
+    perm0 = jnp.arange(M, dtype=jnp.int32)
+    A, V, betas, perm = jax.lax.fori_loop(0, K, step, (A0, V0, b0, perm0))
+
+    R = jnp.triu(A[:K, :])
+
+    # Q = H_0 H_1 … H_{K-1} @ I[:, :K]  (apply reflectors in reverse)
+    E0 = jnp.eye(L, K, dtype=jnp.float32)
+
+    def qstep(i, E):
+        k = K - 1 - i
+        v = jax.lax.dynamic_index_in_dim(V, k, axis=0, keepdims=False)
+        beta = jax.lax.dynamic_index_in_dim(betas, k, keepdims=False)
+        return E - beta * jnp.outer(v, v @ E)
+
+    Q = jax.lax.fori_loop(0, K, qstep, E0)
+
+    # Normalize so diag(R) ≥ 0 (deterministic sign convention).
+    s = jnp.where(jnp.diag(R[:, :K]) < 0, -1.0, 1.0)
+    Q = Q * s[None, :]
+    R = R * s[:, None]
+    return PivotedQR(Q, R, perm)
+
+
+def qr_pivoted_np(W: np.ndarray, num_reflectors: int | None = None):
+    """NumPy reference implementation (same algorithm, plain loops)."""
+    A = np.asarray(W, np.float64).copy()
+    L, M = A.shape
+    K = min(L, M) if num_reflectors is None else min(num_reflectors, L, M)
+    perm = np.arange(M)
+    V = np.zeros((K, L))
+    betas = np.zeros(K)
+    for k in range(K):
+        sq = np.sum(A[k:, :] ** 2, axis=0)
+        sq[:k] = -np.inf
+        p = int(np.argmax(sq))
+        A[:, [k, p]] = A[:, [p, k]]
+        perm[[k, p]] = perm[[p, k]]
+        x = np.zeros(L)
+        x[k:] = A[k:, k]
+        normx = np.linalg.norm(x)
+        sign = 1.0 if x[k] >= 0 else -1.0
+        alpha = -sign * normx
+        v = x.copy()
+        v[k] -= alpha
+        vnorm2 = v @ v
+        beta = 2.0 / vnorm2 if vnorm2 > 1e-30 else 0.0
+        A -= np.outer(v, beta * (v @ A))
+        V[k] = v
+        betas[k] = beta
+    R = np.triu(A[:K, :])
+    Q = np.eye(L, K)
+    for k in range(K - 1, -1, -1):
+        Q -= betas[k] * np.outer(V[k], V[k] @ Q)
+    s = np.where(np.diag(R[:, :K]) < 0, -1.0, 1.0)
+    Q = Q * s[None, :]
+    R = R * s[:, None]
+    return Q, R, perm
+
+
+def unpermute_columns(R: jax.Array, perm: jax.Array) -> jax.Array:
+    """Return R̃ with columns scattered back to the original order, so that
+    ``Q @ R̃ ≈ W`` (instead of ``Q @ R ≈ W[:, perm]``)."""
+    M = R.shape[1]
+    inv = jnp.zeros((M,), jnp.int32).at[perm].set(jnp.arange(M, dtype=jnp.int32))
+    return R[:, inv]
+
+
+# ---------------------------------------------------------------------------
+# Rank selection (paper §3.1 eq. 4 and §4.1)
+# ---------------------------------------------------------------------------
+
+
+def select_rank_energy(rdiag: jax.Array, tau: float) -> jax.Array:
+    """Smallest r with  Σ_{i≤r} R_ii² / Σ_i R_ii²  ≥ τ   (paper eq. 4)."""
+    e = rdiag.astype(jnp.float32) ** 2
+    c = jnp.cumsum(e) / jnp.maximum(jnp.sum(e), 1e-30)
+    return jnp.minimum(jnp.sum((c < tau).astype(jnp.int32)) + 1, rdiag.shape[0])
+
+
+def select_rank_magnitude(rdiag: jax.Array, tau: float) -> jax.Array:
+    """Count of |R_ii| > τ·|R_11|   (paper §4.1 'QR-LoRA configurations')."""
+    a = jnp.abs(rdiag.astype(jnp.float32))
+    return jnp.maximum(jnp.sum((a > tau * a[0]).astype(jnp.int32)), 1)
+
+
+def select_rank(rdiag: jax.Array, policy: str, tau: float, fixed: int = 0) -> jax.Array:
+    if policy == "energy":
+        return select_rank_energy(rdiag, tau)
+    if policy == "magnitude":
+        return select_rank_magnitude(rdiag, tau)
+    if policy == "fixed":
+        return jnp.asarray(min(fixed, rdiag.shape[0]), jnp.int32)
+    raise ValueError(f"unknown rank policy {policy!r}")

@@ -1,0 +1,91 @@
+"""QR-LoRA adapter (the paper's contribution).
+
+For a frozen weight ``W0 (d_in × d_out)`` we compute the column-pivoted QR
+``W0 · P = Q · R`` and parameterize the update
+
+    ΔW = Σ_{i=1}^{r} λ_i · Q_i · R̃_iᵀ  =  Q[:, :r] · diag(λ) · R̃[:r, :]
+
+where ``R̃ = R · Pᵀ`` restores original column order, and ONLY the r scalars
+λ are trainable (init 0, so the model is unchanged at step 0).
+
+Storage is rank-padded to a static ``rank_cap`` so shapes stay constant
+across layers / checkpoints / meshes: columns ``B[:, r:]`` and rows
+``A[r:, :]`` are zero, which makes the λ-gradient of padded entries exactly
+zero — padding is self-masking, no runtime mask needed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdapterConfig
+from repro.core.pivoted_qr import qr_pivoted, select_rank, unpermute_columns
+
+
+def qr_lora_init_single(
+    W: jax.Array, cfg: AdapterConfig, dtype=jnp.bfloat16
+) -> Tuple[Dict[str, jax.Array], int]:
+    """Build the frozen (B, A) factors + trainable λ for one weight matrix.
+
+    Returns ``({"B","A","lam"}, r)`` with B (d_in, rank_cap),
+    A (rank_cap, d_out), lam (rank_cap,) and the selected true rank r.
+    """
+    d_in, d_out = W.shape
+    cap = min(cfg.rank_cap, d_in, d_out)
+    Q, R, perm = qr_pivoted(jnp.asarray(W, jnp.float32))
+    rdiag = jnp.diag(R)
+    r = int(select_rank(rdiag, cfg.rank_policy, cfg.tau, cfg.rank))
+    r = min(r, cap)
+    Rt = unpermute_columns(R, perm)
+    col_mask = (jnp.arange(cap) < r).astype(jnp.float32)
+    B = Q[:, :cap] * col_mask[None, :]
+    A = Rt[:cap, :] * col_mask[:, None]
+    return (
+        {
+            "B": B.astype(dtype),
+            "A": A.astype(dtype),
+            "lam": jnp.zeros((cap,), jnp.float32),
+        },
+        r,
+    )
+
+
+def qr_lora_init_stacked(
+    W_stacked: jax.Array,
+    layer_mask: Tuple[bool, ...],
+    cfg: AdapterConfig,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    """Init adapters for a (n_layers, d_in, d_out) stacked projection.
+
+    Non-adapted layers get all-zero factors (their λ gradient is exactly 0).
+    Adds an int32 ``ranks`` (n_layers,) metadata vector used for the paper's
+    trainable-parameter counting.
+    """
+    n_layers, d_in, d_out = W_stacked.shape
+    cap = min(cfg.rank_cap, d_in, d_out)
+    B = np.zeros((n_layers, d_in, cap), np.float32)
+    A = np.zeros((n_layers, cap, d_out), np.float32)
+    ranks = np.zeros((n_layers,), np.int32)
+    for l in range(n_layers):
+        if not layer_mask[l]:
+            continue
+        adp, r = qr_lora_init_single(W_stacked[l], cfg, dtype=jnp.float32)
+        B[l] = np.asarray(adp["B"])
+        A[l] = np.asarray(adp["A"])
+        ranks[l] = r
+    return {
+        "B": jnp.asarray(B, dtype),
+        "A": jnp.asarray(A, dtype),
+        "lam": jnp.zeros((n_layers, cap), jnp.float32),
+        "ranks": jnp.asarray(ranks),
+    }
+
+
+def qr_lora_delta(adp: Dict[str, jax.Array], scale: float = 1.0) -> jax.Array:
+    """Materialize ΔW = B · diag(λ) · A (merge path, serving)."""
+    lam = adp["lam"].astype(adp["A"].dtype)
+    return (adp["B"] * lam[..., None, :]) @ adp["A"] * scale

@@ -1,0 +1,2 @@
+from repro.data.synthetic import lm_batches, GlueTask, GLUE_TASKS, make_task  # noqa: F401
+from repro.data.metrics import accuracy, f1_binary, matthews_corr, pearson_corr  # noqa: F401

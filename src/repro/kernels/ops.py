@@ -1,0 +1,120 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, batching conventions, backend
+selection (``interpret=True`` on CPU so the same code path is testable
+everywhere), and a custom VJP for the fused QR-LoRA matmul so it can sit on
+the training path (B, A, W are frozen in QR-LoRA — their grads are zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.qrlora_matmul import qrlora_matmul_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+# ---------------------------------------------------------------------------
+# qrlora_matmul with custom VJP (trains λ and x; W/B/A frozen → zero grads)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def qrlora_matmul(x, W, B, A, lam, scale: float = 1.0):
+    return _qrlora_fwd_impl(x, W, B, A, lam, scale)
+
+
+def _qrlora_fwd_impl(x, W, B, A, lam, scale):
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = W.shape[1]
+    if not _on_tpu():
+        interpret = True
+    else:
+        interpret = False
+    bm = 256 if M % 256 == 0 or M > 256 else M
+    x2, M0 = _pad_to(x2, bm, 0)
+    if x2.shape[0] % bm:
+        bm = int(np.gcd(x2.shape[0], 256)) or x2.shape[0]
+    bn = int(np.gcd(N, 256))
+    bk = int(np.gcd(K, 512))
+    y = qrlora_matmul_kernel(
+        x2, W, B, A, lam, scale=scale, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )[:M0]
+    return y.reshape(*orig_shape[:-1], N)
+
+
+def _qrlora_fwd(x, W, B, A, lam, scale):
+    return _qrlora_fwd_impl(x, W, B, A, lam, scale), (x, W, B, A, lam)
+
+
+def _qrlora_bwd(scale, res, g):
+    x, W, B, A, lam = res
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    lam32 = lam.astype(jnp.float32)
+    gA = g2 @ A.astype(jnp.float32).T  # (M, r)
+    dx = g2 @ W.astype(jnp.float32).T + ((gA * lam32) @ B.astype(jnp.float32).T) * scale
+    dlam = ((x2 @ B.astype(jnp.float32)) * gA).sum(0) * scale
+    return (
+        dx.reshape(x.shape).astype(x.dtype),
+        jnp.zeros_like(W),
+        jnp.zeros_like(B),
+        jnp.zeros_like(A),
+        dlam.astype(lam.dtype),
+    )
+
+
+qrlora_matmul.defvjp(_qrlora_fwd, _qrlora_bwd)
+
+
+# ---------------------------------------------------------------------------
+# attention wrappers — model layout (B, S, H, dh) ↔ kernel layout
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512, bk: int = 512):
+    """q (B,Sq,H,dh); k,v (B,Sk,KV,dh) → (B,Sq,H,dh)."""
+    B, Sq, H, dh = q.shape
+    interpret = not _on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = int(np.gcd(Sq, bq))
+    bkk = int(np.gcd(kt.shape[2], bk))
+    o = flash_attention_kernel(
+        qt, kt, vt, causal=causal, bq=bq, bk=bkk, interpret=interpret
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, bk: int = 512):
+    """q (B,1,H,dh) or (B,H,dh); caches (B,S,KV,dh) → same rank as q."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    interpret = not _on_tpu()
+    S = k_cache.shape[1]
+    bk = int(np.gcd(S, bk))
+    o = decode_attention_kernel(q, k_cache, v_cache, length, bk=bk, interpret=interpret)
+    return o[:, None] if squeeze else o

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qrlora_matmul_ref(x, W, B, A, lam, scale: float = 1.0):
+    """y = x·W + ((x·B)·λ)·A·scale.  x (M,K) W (K,N) B (K,r) A (r,N) λ (r,)."""
+    y = jnp.dot(x, W, preferred_element_type=jnp.float32)
+    low = jnp.dot(
+        jnp.dot(x, B, preferred_element_type=jnp.float32) * lam.astype(jnp.float32),
+        A.astype(jnp.float32),
+    )
+    return (y + low * scale).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,Sq,H,dh); k,v (B,Sk,KV,dh) — GQA broadcast, fp32 softmax."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (dh**-0.5)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q (B,H,dh); caches (B,S,KV,dh); length: valid prefix. → (B,H,dh)."""
+    B, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k_cache, rep, axis=2)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k, preferred_element_type=jnp.float32) * (dh**-0.5)
+    mask = (jnp.arange(S) < length)[None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(v.dtype), v).astype(q.dtype)

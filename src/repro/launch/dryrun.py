@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the correct step function is lowered against
+ShapeDtypeStruct inputs under the production mesh, compiled, and the
+memory/cost/collective analysis recorded:
+
+  train_*    → train_step   (PEFT QR-LoRA partitioned state, grad-accum)
+  prefill_*  → prefill_step
+  decode_* / long_* → serve (decode) step
+
+Usage:
+  python -m repro.launch.dryrun                       # all cells, 16×16
+  python -m repro.launch.dryrun --multi-pod           # all cells, 2×16×16
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --out reports/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get_config, shape_applicable
+from repro.launch import specs as S
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.sharding import rules as shrules
+from repro.training import make_train_step, make_decode_step, make_prefill_step
+
+
+def _lower_cell(cfg, shape, mesh):
+    model = build_model(cfg)
+    batch = S.input_specs(cfg, shape)
+    bshard = S.batch_shardings(cfg, shape, mesh)
+    ws = cfg.decode_weight_stationary and shape.kind == "decode"
+    with shrules.axis_rules(mesh, fsdp=cfg.fsdp, dp_only=cfg.dp_only,
+                            replicate_batch=ws):
+        if shape.kind == "train":
+            state = S.train_state_shapes(model)
+            sshard = S.train_state_shardings(state, mesh, fsdp=cfg.fsdp, dp_only=cfg.dp_only)
+            step = make_train_step(model, AdamWConfig())
+            lowered = jax.jit(
+                step,
+                in_shardings=(sshard, bshard),
+                out_shardings=(sshard, None),
+                donate_argnums=(0,),
+            ).lower(state, batch)
+        else:
+            params = model.dryrun_params()
+            pshard = S.params_shardings(params, mesh, fsdp=cfg.fsdp, dp_only=cfg.dp_only)
+            cache = S.decode_cache_shapes(model, shape)
+            cshard = S.decode_cache_shardings(cache, cfg, shape, mesh)
+            if shape.kind == "prefill":
+                step = make_prefill_step(model)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pshard, cshard, bshard),
+                    out_shardings=(None, cshard),
+                    donate_argnums=(1,),
+                ).lower(params, cache, batch)
+            else:
+                step = make_decode_step(model)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pshard, cshard, bshard),
+                    out_shardings=(None, None, cshard),
+                    donate_argnums=(1,),
+                ).lower(params, cache, batch)
+    return lowered
+
+
+def _probe_costs(cfg, shape, mesh):
+    """Exact per-layer FLOPs/collective bytes via unrolled 1- and 2-group
+    probe compiles (XLA's cost analysis counts a scan body once, not
+    × trip-count — see EXPERIMENTS.md §Roofline 'methodology').
+
+    cost(L groups) is affine in L:  total = c1 + (c2 - c1)·(G - 1).
+    """
+    G = cfg.n_layers // cfg.group_size
+    results = []
+    for g in (1, 2):
+        cfg_p = cfg.replace(
+            n_layers=g * cfg.group_size, scan_layers=False, microbatches=1
+        )
+        lowered = _lower_cell(cfg_p, shape, mesh)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = RL.collective_bytes(compiled.as_text())
+        results.append(
+            (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), coll)
+        )
+    (f1, b1, c1), (f2, b2, c2) = results
+    flops = f1 + (f2 - f1) * (G - 1)
+    hbm = b1 + (b2 - b1) * (G - 1)
+    kinds = set(c1) | set(c2)
+    coll = {k: int(c1.get(k, 0) + (c2.get(k, 0) - c1.get(k, 0)) * (G - 1)) for k in kinds}
+    coll = {k: max(v, 0) for k, v in coll.items()}
+    return flops, hbm, coll
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "SKIP(full-attn)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered = _lower_cell(cfg, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        }
+        hlo = compiled.as_text()
+        # scan-corrected per-device costs from the unrolled probe
+        try:
+            flops, hbm, coll = _probe_costs(cfg, shape, mesh)
+            rl = RL.from_terms(
+                flops, hbm, coll,
+                model_flops=RL.model_flops_for(cfg, shape),
+                chips=mesh.devices.size,
+            )
+            rec["probe"] = "unrolled-affine"
+        except Exception as pe:  # fall back to raw (scan-undercounted) costs
+            rl = RL.analyze(
+                compiled, hlo,
+                model_flops=RL.model_flops_for(cfg, shape),
+                chips=mesh.devices.size,
+            )
+            rec["probe"] = f"raw({type(pe).__name__})"
+        rec["roofline"] = {
+            "flops_per_device": rl.flops,
+            "hbm_bytes_per_device": rl.hbm_bytes,
+            "coll_bytes_per_device": rl.coll_bytes,
+            "coll_by_kind": rl.coll_by_kind,
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "bottleneck": rl.bottleneck,
+            "model_flops": rl.model_flops,
+            "useful_ratio": round(rl.useful_ratio, 4),
+            "roofline_fraction": round(rl.roofline_fraction, 4),
+        }
+        rec["status"] = "OK"
+        if verbose:
+            print(
+                f"  [OK] {arch} × {shape_name} ({rec['mesh']}): "
+                f"peak {rec['memory']['peak_per_device_gb']} GiB/dev, "
+                f"bottleneck={rl.bottleneck} "
+                f"(c={rl.compute_s*1e3:.2f}ms m={rl.memory_s*1e3:.2f}ms "
+                f"x={rl.collective_s*1e3:.2f}ms) "
+                f"roofline_frac={rl.roofline_fraction:.3f} "
+                f"[lower {rec['lower_s']}s compile {rec['compile_s']}s]",
+                flush=True,
+            )
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  [FAIL] {arch} × {shape_name}: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), help="one shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON report here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else all_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for mp in meshes:
+        print(f"=== mesh {'2x16x16 (multi-pod)' if mp else '16x16 (single pod)'} ===",
+              flush=True)
+        for arch in archs:
+            for shape in shapes:
+                records.append(run_cell(arch, shape, mp))
+    n_ok = sum(r["status"] == "OK" for r in records)
+    n_skip = sum(r["status"].startswith("SKIP") for r in records)
+    n_fail = sum(r["status"] == "FAIL" for r in records)
+    print(f"\n== {n_ok} OK / {n_skip} SKIP / {n_fail} FAIL ==")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print("report →", args.out)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: compile one (arch × shape) cell with config
+overrides and report the roofline terms — the measure step of the
+hypothesis → change → measure → validate loop.
+
+  python -m repro.launch.hillclimb --arch qwen2_0_5b --shape train_4k \
+      --set dp_only=True --set microbatches=2
+"""
+import argparse
+import json
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as RL
+from repro.launch.dryrun import _lower_cell, _probe_costs
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def run(arch: str, shape_name: str, overrides: dict, multi_pod: bool = False):
+    cfg = get_config(arch, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered = _lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30
+    try:
+        flops, hbm, coll = _probe_costs(cfg, shape, mesh)
+        probe = "unrolled-affine"
+    except Exception as e:
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        hbm = float(ca.get("bytes accessed", 0.0))
+        coll = RL.collective_bytes(compiled.as_text())
+        probe = f"raw({type(e).__name__})"
+    rl = RL.from_terms(flops, hbm, coll,
+                       model_flops=RL.model_flops_for(cfg, shape),
+                       chips=mesh.devices.size)
+    rec = {
+        "arch": arch, "shape": shape_name, "overrides": overrides,
+        "peak_gb": round(peak, 3),
+        "compute_s": round(rl.compute_s, 4), "memory_s": round(rl.memory_s, 4),
+        "collective_s": round(rl.collective_s, 4),
+        "bottleneck": rl.bottleneck, "useful": round(rl.useful_ratio, 4),
+        "roofline_frac": round(rl.roofline_fraction, 4),
+        "coll_by_kind": {k: int(v) for k, v in rl.coll_by_kind.items()},
+        "probe": probe,
+        "temp_gb": round(ma.temp_size_in_bytes / 2**30, 2),
+        "arg_gb": round(ma.argument_size_in_bytes / 2**30, 2),
+    }
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    run(args.arch, args.shape, overrides, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Render dry-run JSON reports into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report reports/dryrun_single.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}G" if b >= 2**28 else f"{b/2**20:.1f}M"
+
+
+def render(path: str) -> str:
+    recs = json.load(open(path))
+    out = []
+    out.append(
+        "| arch | shape | mesh | status | peak GiB/dev | compute_s | memory_s "
+        "| collective_s | bottleneck | useful | roofline_frac |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "OK":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| — | — | — | — | — | — | — |"
+            )
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {r['memory']['peak_per_device_gb']} "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f} | {rl['bottleneck']} "
+            f"| {rl['useful_ratio']:.3f} | {rl['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(f"### {p}\n")
+        print(render(p))
+        print()

@@ -1,0 +1,133 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e hardware model (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (guide constants).
+
+Conventions (validated empirically — see EXPERIMENTS.md §Roofline):
+* ``compiled.cost_analysis()`` under SPMD reports **per-device** FLOPs and
+  bytes, so  compute_s = flops / PEAK  and  memory_s = bytes / HBM_BW
+  directly (this equals the spec's global/(chips·peak) formula).
+* collective bytes are parsed from the per-partition optimized HLO: the
+  result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute op.  collective_s = bytes / ICI_BW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO text."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":  # async pairs: count only the -start
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    coll_bytes: float  # per-device collective bytes
+    coll_by_kind: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0  # global useful flops (6·N·D)
+    chips: int = 1
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — fraction of compiled compute
+        that is 'useful' (catches remat/redundancy waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (the §Perf score)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / self.roofline_s if self.roofline_s else 0.0
+
+
+def from_terms(
+    flops: float, hbm: float, coll: Dict[str, int], *, model_flops: float, chips: int
+) -> Roofline:
+    cb = float(sum(coll.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = cb / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=cb,
+        coll_by_kind=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def analyze(compiled, hlo_text: str, *, model_flops: float, chips: int) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    return from_terms(
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        collective_bytes(hlo_text),
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (decode fwd) with N = active params."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

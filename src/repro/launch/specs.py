@@ -1,0 +1,186 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs per (arch × shape) cell.
+
+Everything here is allocation-free: model/state shapes come from
+``Model.dryrun_params`` / ``jax.eval_shape``; shardings from
+``repro.sharding.rules`` under the active mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import adapter_api
+from repro.models.model_zoo import Model
+from repro.sharding import rules as shrules
+
+Pytree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# batch input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.family == "audio":
+            out = {
+                "embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+                "targets": SDS((B, S), jnp.int32),
+            }
+        else:
+            out = {"tokens": SDS((B, S), jnp.int32)}
+    else:  # decode: one new token against a cache of S
+        if cfg.family == "audio":
+            out = {"embeds": SDS((B, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            out = {"token": SDS((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = SDS((B, cfg.n_image_tokens, cfg.d_image), jnp.bfloat16)
+    return out
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    if cfg.dp_only:
+        dp = tuple(mesh.axis_names)
+        n = mesh.devices.size
+        bspec = dp if shape.global_batch % n == 0 else None
+    elif shape.kind == "decode" and cfg.decode_weight_stationary:
+        # weight-stationary decode: activations replicated; every device
+        # reads only its own weight shard (no per-step all-gathers)
+        bspec = None
+    else:
+        dp = _dp_axes(mesh)
+        bspec = dp if (dp and shape.global_batch % _dp_size(mesh) == 0) else None
+    specs = {}
+    for k, v in input_specs(cfg, shape).items():
+        specs[k] = NamedSharding(mesh, P(bspec, *([None] * (len(v.shape) - 1))))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# train state / decode cache shapes + shardings
+# ---------------------------------------------------------------------------
+
+
+def train_state_shapes(model: Model) -> Pytree:
+    params = model.dryrun_params()
+    mask = model.trainable_mask(params)
+    trainable, frozen = adapter_api.partition(params, mask)
+
+    def f32(x):
+        return None if x is None else SDS(x.shape, jnp.float32)
+
+    none_leaf = lambda x: x is None
+    return {
+        "trainable": trainable,
+        "frozen": frozen,
+        "opt": {
+            "step": SDS((), jnp.int32),
+            "m": jax.tree_util.tree_map(f32, trainable, is_leaf=none_leaf),
+            "v": jax.tree_util.tree_map(f32, trainable, is_leaf=none_leaf),
+        },
+    }
+
+
+def train_state_shardings(state_shapes: Pytree, mesh: Mesh, *, fsdp: bool, dp_only: bool = False) -> Pytree:
+    """Params by rule table; optimizer m/v mirror their parameter's sharding."""
+    with shrules.axis_rules(mesh, fsdp=fsdp, dp_only=dp_only):
+        tshard = shrules.param_sharding_rules(state_shapes["trainable"])
+        fshard = shrules.param_sharding_rules(state_shapes["frozen"])
+        mshard = shrules.param_sharding_rules(state_shapes["opt"]["m"])
+        vshard = shrules.param_sharding_rules(state_shapes["opt"]["v"])
+    return {
+        "trainable": tshard,
+        "frozen": fshard,
+        "opt": {
+            "step": NamedSharding(mesh, P()),
+            "m": mshard,
+            "v": vshard,
+        },
+    }
+
+
+def decode_cache_shapes(model: Model, shape: ShapeConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+
+
+def decode_cache_shardings(cache_shapes: Pytree, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
+    """KV caches: batch→DP when divisible, kv-heads→model when divisible;
+    batch=1 long-context cells shard the *sequence* dim over every axis."""
+    dp = _dp_axes(mesh)
+    B = shape.global_batch
+    batch_ok = dp and B % _dp_size(mesh) == 0
+    model_ax = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape[model_ax] if model_ax else 1
+    all_axes = tuple(mesh.axis_names)
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name in ("pos", "idx"):
+            return NamedSharding(mesh, P(*([None] * nd)))
+        if name in ("k", "v"):
+            # (G, [inner,] B, S, KV, dh) — batch→dp when divisible; model
+            # axis takes kv-heads when they divide, else the HEAD DIM
+            # (always a 128-multiple).  Never the sequence dim: a
+            # dynamic-update-slice into a seq-sharded cache makes GSPMD
+            # all-gather the whole cache every decode step.
+            lead = nd - 4
+            spec = [None] * nd
+            if batch_ok:
+                spec[lead] = dp
+            if model_ax and cfg.n_kv_heads % msize == 0:
+                spec[lead + 2] = model_ax
+            elif model_ax and cfg.d_head % msize == 0:
+                spec[lead + 3] = model_ax
+            return NamedSharding(mesh, P(*spec))
+        if name in ("conv", "h", "C", "n", "m", "c"):
+            # recurrent state: (..., B, feature...) — batch→dp, then the
+            # LARGEST divisible feature dim → model
+            spec = [None] * nd
+            for i, s in enumerate(leaf.shape):
+                if batch_ok and s == B and i >= nd - 4:
+                    spec[i] = dp
+                    break
+            if model_ax:
+                cands = [
+                    i
+                    for i in range(max(nd - 3, 0), nd)
+                    if spec[i] is None
+                    and leaf.shape[i] % msize == 0
+                    and leaf.shape[i] >= msize
+                ]
+                if cands:
+                    best = max(cands, key=lambda i: leaf.shape[i])
+                    spec[best] = model_ax
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    flat, td = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(td, [spec_for(p, l) for p, l in flat])
+
+
+def params_shardings(params_shapes: Pytree, mesh: Mesh, *, fsdp: bool, dp_only: bool = False) -> Pytree:
+    with shrules.axis_rules(mesh, fsdp=fsdp, dp_only=dp_only):
+        return shrules.param_sharding_rules(params_shapes)

@@ -1,0 +1,227 @@
+"""GQA attention: train/prefill/decode paths, cross-attention, QK-norm.
+
+Three implementations selectable per config (``attn_impl``):
+
+* ``xla``         — plain einsum+softmax (default; used in distributed
+                    lowering; chunks over query blocks when S is large so
+                    activation memory is O(S·chunk) instead of O(S²)).
+* ``pallas``      — the flash-attention Pallas TPU kernel
+                    (``repro/kernels/flash_attention.py``), for real TPU runs.
+
+Adapters (QR-LoRA / LoRA / SVD-LoRA) hook the four projections through
+:func:`repro.core.adapter_api.adapted_matmul`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter_api import adapted_matmul
+from repro.models.layers import apply_rope, dense_init, rms_norm, stacked_dense_init
+from repro.sharding import shard
+
+_CHUNK_THRESHOLD = 8192  # plain scores up to this S, chunked above
+_Q_CHUNK = 512
+
+
+def _decode_shard_names(cfg: ModelConfig):
+    """Model-axis placement for decode-attention activations, matching the
+    KV-cache rule in launch/specs.py: kv-heads when they divide the model
+    axis, else the head dim (always a multiple of 64)."""
+    from repro.sharding.rules import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return ("heads", None)
+    m = mesh.shape["model"]
+    if cfg.n_kv_heads % m == 0:
+        return ("heads", None)
+    if cfg.d_head % m == 0:
+        return (None, "heads")
+    return (None, None)
+
+
+def init_attn_params(key, cfg: ModelConfig, n: int, dtype, cross: bool = False) -> Dict:
+    H, KV, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": stacked_dense_init(ks[0], n, d, H * dh, dtype),
+        "wk": stacked_dense_init(ks[1], n, d, KV * dh, dtype),
+        "wv": stacked_dense_init(ks[2], n, d, KV * dh, dtype),
+        "wo": stacked_dense_init(ks[3], n, H * dh, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, H * dh), dtype)
+        p["bk"] = jnp.zeros((n, KV * dh), dtype)
+        p["bv"] = jnp.zeros((n, KV * dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n, dh), dtype)
+        p["k_norm"] = jnp.ones((n, dh), dtype)
+    if cross:
+        p["xa_gate"] = jnp.zeros((n,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, adp, kv_input=None):
+    """Project to q (B,S,H,dh) and k,v (B,Skv,KV,dh)."""
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    B = x.shape[0]
+    kv_x = x if kv_input is None else kv_input
+    q = adapted_matmul(x, p["wq"], (adp or {}).get("wq"))
+    k = adapted_matmul(kv_x, p["wk"], (adp or {}).get("wk"))
+    v = adapted_matmul(kv_x, p["wv"], (adp or {}).get("wv"))
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, -1, H, dh)
+    k = k.reshape(B, -1, KV, dh)
+    v = v.reshape(B, -1, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    B, S, KV, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, n_rep, dh)).reshape(
+        B, S, KV * n_rep, dh
+    )
+
+
+def _softmax_attend(q, k, v, mask, scale, decode=False, scores_dtype=jnp.float32):
+    """GQA attention via grouped einsum — repeated K/V are NEVER
+    materialized (a (B,S,H,dh) broadcast of the KV cache is what GSPMD
+    replicates wholesale; see DESIGN.md §4 note on GQA).
+
+    q (B,Sq,H,dh); k,v (B,Sk,KV,dh); mask broadcastable to (B,1,1,Sq,Sk).
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, dh)
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg, k, preferred_element_type=scores_dtype
+    ) * scale
+    if not decode:
+        scores = shard(scores, "batch", "heads", None, None, None)
+    neg = -1e30 if scores_dtype == jnp.float32 else -6e4  # bf16-representable
+    scores = jnp.where(mask, scores, jnp.asarray(neg, scores_dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(scores_dtype)
+    out = jnp.einsum(
+        "bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, scale, causal: bool, kv_len=None, scores_dtype=jnp.float32):
+    """Query-chunked attention — O(S·chunk) score memory."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    c = min(_Q_CHUNK, Sq)
+    n_chunks = (Sq + c - 1) // c
+    pad = n_chunks * c - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(B, n_chunks, c, H, dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(Sk)
+
+    def body(carry, qc_i):
+        qc, i = qc_i
+        qpos = i * c + jnp.arange(c)
+        if causal:
+            m = kpos[None, :] <= qpos[:, None]
+        else:
+            m = jnp.ones((c, Sk), bool)
+        if kv_len is not None:
+            m = m & (kpos[None, :] < kv_len)
+        out = _softmax_attend(qc, k, v, m[None, None, None], scale, scores_dtype=scores_dtype)
+        return carry, out
+
+    _, outs = jax.lax.scan(
+        body, None, (qs, jnp.arange(n_chunks))
+    )  # (n_chunks, B, c, H, dh)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * c, H, dh)
+    return out[:, :Sq]
+
+
+def attention(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    adp: Optional[Dict] = None,
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    cross_kv: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output (B,S,d), updated cache or None).
+
+    * ``cache=None``                — train / encoder path.
+    * ``cache`` with ``S > 1``      — prefill: fills the cache.
+    * ``cache`` with ``S == 1``     — decode: reads + appends one position.
+    * ``cross_kv``                  — cross-attention (no cache, no rope).
+    """
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    B, S = x.shape[:2]
+    scale = dh**-0.5
+    n_rep = H // KV
+    is_cross = cross_kv is not None
+    sdt = jnp.dtype(cfg.attn_scores_dtype)
+
+    q, k, v = _project_qkv(p, x, cfg, adp, kv_input=cross_kv)
+    if not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if cache is None or S > 1 else positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not is_cross:
+        if S == 1:  # decode
+            nm = _decode_shard_names(cfg)
+            idx = cache["idx"]
+            k = shard(k, "batch", None, *nm)
+            v = shard(v, "batch", None, *nm)
+            q = shard(q, "batch", None, *nm)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            new_cache = {"k": ck, "v": cv, "idx": idx + 1}
+            kpos = jnp.arange(ck.shape[1])
+            mask = (kpos < idx + 1)[None, None, None, None, :]
+            out = _softmax_attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, scale, decode=True, scores_dtype=sdt)
+            o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
+            return shard(o, "batch", None, None), new_cache
+        else:  # prefill: write k/v into cache then run the train path
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": ck, "v": cv, "idx": jnp.asarray(S, jnp.int32)}
+
+    Sk = k.shape[1]
+    if S > _CHUNK_THRESHOLD:
+        out = _attend_chunked(q, k, v, scale, causal and not is_cross, scores_dtype=sdt)
+    else:
+        if causal and not is_cross:
+            mask = (jnp.arange(Sk)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
+        else:
+            mask = jnp.ones((1, 1, 1, S, Sk), bool)
+        out = _softmax_attend(q, k, v, mask, scale, scores_dtype=sdt)
+    o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
+    return shard(o, "batch", None, None), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_attn_layers: int, dtype):
+    """Stacked KV cache pytree for the decoder's attention layers."""
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((n_attn_layers, batch, max_len, KV, dh), dtype),
+        "v": jnp.zeros((n_attn_layers, batch, max_len, KV, dh), dtype),
+        "idx": jnp.zeros((n_attn_layers,), jnp.int32),
+    }

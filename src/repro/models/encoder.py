@@ -1,0 +1,101 @@
+"""RoBERTa-style bidirectional encoder + classification head.
+
+This is the paper's experimental substrate (RoBERTa-base, 125M): 12 layers,
+d=768, 12 heads, FFN 3072, learned positions, LayerNorm, GELU FFN, [CLS]
+pooling with a tanh pooler and a task head.  QR-LoRA / LoRA / SVD-LoRA hook
+the attention projections exactly as in §4.1 of the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter_api import adapted_matmul
+from repro.models.layers import layer_norm, stacked_dense_init
+from repro.sharding import shard
+
+
+def init_encoder_params(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    H, dh, ff = cfg.n_heads, cfg.d_head, cfg.d_ff
+    ks = iter(jax.random.split(key, 24))
+    groups = {
+        "ln1_s": jnp.ones((L, d), dtype),
+        "ln1_b": jnp.zeros((L, d), dtype),
+        "ln2_s": jnp.ones((L, d), dtype),
+        "ln2_b": jnp.zeros((L, d), dtype),
+        "attn": {
+            "wq": stacked_dense_init(next(ks), L, d, H * dh, dtype),
+            "wk": stacked_dense_init(next(ks), L, d, H * dh, dtype),
+            "wv": stacked_dense_init(next(ks), L, d, H * dh, dtype),
+            "wo": stacked_dense_init(next(ks), L, H * dh, d, dtype),
+        },
+        "mlp": {
+            "w_up": stacked_dense_init(next(ks), L, d, ff, dtype),
+            "w_down": stacked_dense_init(next(ks), L, ff, d, dtype),
+        },
+    }
+    return {
+        "embed": (jax.random.normal(next(ks), (V, d), jnp.float32) * 0.02).astype(dtype),
+        "pos_embed": (
+            jax.random.normal(next(ks), (cfg.max_position or 512, d), jnp.float32) * 0.02
+        ).astype(dtype),
+        "emb_ln_s": jnp.ones((d,), dtype),
+        "emb_ln_b": jnp.zeros((d,), dtype),
+        "groups": groups,
+        "pooler": stacked_dense_init(next(ks), 1, d, d, dtype)[0],
+        "cls_w": (jax.random.normal(next(ks), (d, max(cfg.n_classes, 1)), jnp.float32) * 0.02).astype(
+            jnp.float32
+        ),
+        "cls_b": jnp.zeros((max(cfg.n_classes, 1),), jnp.float32),
+    }
+
+
+def _enc_layer(cfg: ModelConfig, p, x, mask, adapters):
+    """Post-LN transformer encoder layer (BERT/RoBERTa ordering)."""
+    H, dh = cfg.n_heads, cfg.d_head
+    B, S, d = x.shape
+    adp = adapters or {}
+
+    def proj(name, inp):
+        a = adp.get("attn", {}).get(name)
+        a = {k: v for k, v in a.items() if k != "ranks"} if a else None
+        return adapted_matmul(inp, p["attn"][name], a)
+
+    q = proj("wq", x).reshape(B, S, H, dh)
+    k = proj("wk", x).reshape(B, S, H, dh)
+    v = proj("wv", x).reshape(B, S, H, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * dh**-0.5
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v).reshape(B, S, H * dh)
+    x = layer_norm(x + proj("wo", out), p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+    h = jax.nn.gelu(x @ p["mlp"]["w_up"])
+    x = layer_norm(x + h @ p["mlp"]["w_down"], p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+    return x
+
+
+def encoder_apply(
+    params, cfg: ModelConfig, tokens: jax.Array, attn_mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """tokens (B,S) → task output: logits (B, n_classes) or regression (B,)."""
+    B, S = tokens.shape
+    if attn_mask is None:
+        attn_mask = jnp.ones((B, S), bool)
+    x = params["embed"][tokens] + params["pos_embed"][:S][None]
+    x = layer_norm(x, params["emb_ln_s"], params["emb_ln_b"], cfg.norm_eps)
+    x = shard(x, "batch", None, None)
+    groups = params["groups"]
+
+    def body(x, p):
+        adapters = p.get("adapters")
+        return _enc_layer(cfg, p, x, attn_mask, adapters), None
+
+    x, _ = jax.lax.scan(body, x, groups)
+    cls = jnp.tanh(x[:, 0] @ params["pooler"])  # [CLS] pooling
+    out = cls.astype(jnp.float32) @ params["cls_w"] + params["cls_b"]
+    return out

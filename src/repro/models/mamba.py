@@ -1,0 +1,166 @@
+"""Mamba (S6) block — the jamba hybrid's sequence mixer.
+
+Selective SSM with input-dependent (dt, B, C); training uses a chunked
+associative scan (O(S·chunk) state-tensor memory instead of O(S) full
+materialization of (B,S,d_in,N)); decode is the O(1) recurrent step.
+
+TPU adaptation (DESIGN.md §3): the original CUDA kernel fuses the scan into
+shared memory; on TPU we chunk so each (B, chunk, d_in_shard, N) block fits
+VMEM-scale working sets, with ``jax.lax.associative_scan`` inside the chunk
+(log-depth, VPU-friendly) and a sequential carry across chunks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import stacked_dense_init
+from repro.sharding import shard
+
+_CHUNK = 256
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def init_mamba_params(key, cfg: ModelConfig, n: int, dtype) -> Dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dr = dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    # dt bias init so softplus(dt_b) spans [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[5], (n, di), jnp.float32)
+    dt_init = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_b = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, None], (n, di, 1))
+    return {
+        "m_in": stacked_dense_init(ks[0], n, d, di, dtype),
+        "m_gate": stacked_dense_init(ks[1], n, d, di, dtype),
+        "m_conv": (jax.random.normal(ks[2], (n, di, dc), jnp.float32) / np.sqrt(dc)).astype(dtype),
+        "m_xproj": stacked_dense_init(ks[3], n, di, dr + 2 * N, dtype),
+        "m_dt_w": stacked_dense_init(ks[4], n, dr, di, jnp.float32),
+        "m_dt_b": dt_b,
+        "m_A_log": jnp.log(A),
+        "m_D": jnp.ones((n, di), jnp.float32),
+        "m_out": stacked_dense_init(ks[6], n, di, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B,S,di), w (di,dc). prev (B,dc-1,di) state."""
+    B, S, di = x.shape
+    dc = w.shape[-1]
+    if prev is None:
+        prev = jnp.zeros((B, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+dc-1, di)
+    out = jnp.zeros((B, S, di), jnp.float32)
+    for j in range(dc):
+        out = out + xp[:, j : j + S, :].astype(jnp.float32) * w[:, j].astype(jnp.float32)
+    new_prev = xp[:, -(dc - 1) :, :] if dc > 1 else prev
+    return out.astype(x.dtype), new_prev
+
+
+def _ssm_scan_chunked(dt, xc, Bs, Cs, A, h0):
+    """y_t = C_t · h_t,   h_t = exp(dt_t⊙A) ⊙ h_{t-1} + (dt_t·xc_t)·B_t.
+
+    dt/xc: (B,S,di); Bs/Cs: (B,S,N); A: (di,N).  The (B,c,di,N) discretized
+    state tensors (dA, dBx) are built PER CHUNK inside the scan — the
+    full-sequence (B,S,di,N) tensor is never materialized (that tensor is
+    why naive SSM training OOMs; the CUDA kernel avoids it the same way)."""
+    B, S, di = dt.shape
+    N = A.shape[-1]
+    c = min(_CHUNK, S)
+    n_chunks = (S + c - 1) // c
+    pad = n_chunks * c - S
+
+    def pad2(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)) if pad else x
+
+    def chunked(x):
+        return pad2(x).reshape(B, n_chunks, c, *x.shape[2:]).swapaxes(0, 1)
+
+    dtc, xcc, Bc, Cc = chunked(dt), chunked(xc), chunked(Bs), chunked(Cs)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        dt_c, xc_c, b_c, c_c = xs  # (B,c,di), (B,c,di), (B,c,N), (B,c,N)
+        a = jnp.exp(dt_c[..., None] * A)  # (B,c,di,N)
+        b = (dt_c * xc_c)[..., None] * b_c[:, :, None, :]
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = A_cum * h[:, None] + B_cum  # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (dtc, xcc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * c, di)
+    return y[:, :S], h_last
+
+
+def mamba_mixer(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+    adp: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B,S,d) → (y (B,S,d), new_state).  state: {"conv","h"} for decode."""
+    from repro.core.adapter_api import adapted_matmul
+
+    B, S, d = x.shape
+    N = cfg.mamba_d_state
+    dr = dt_rank(cfg)
+    decode = state is not None and S == 1
+
+    u = adapted_matmul(x, p["m_in"], (adp or {}).get("mamba_in"))  # (B,S,di)
+    z = x @ p["m_gate"]
+    u = shard(u, "batch", None, "ff")
+    xc, new_conv = _causal_conv(u, p["m_conv"], state["conv"] if decode else None)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["m_xproj"]  # (B,S,dr+2N)
+    dt_r, Bs, Cs = jnp.split(proj, [dr, dr + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["m_dt_w"] + p["m_dt_b"]
+    )  # (B,S,di) fp32
+    dt = shard(dt, "batch", None, "ff")
+    A = -jnp.exp(p["m_A_log"])  # (di, N)
+
+    if decode:
+        dA = jnp.exp(dt[:, 0, :, None] * A)  # (B,di,N)
+        dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bs.astype(
+            jnp.float32
+        )[:, 0, None, :]
+        h = dA * state["h"] + dBx  # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0].astype(jnp.float32))[:, None]
+        new_state = {"conv": new_conv, "h": h}
+    else:
+        h0 = jnp.zeros((B, dt.shape[2], N), jnp.float32)
+        y, h_last = _ssm_scan_chunked(
+            dt, xc.astype(jnp.float32), Bs.astype(jnp.float32),
+            Cs.astype(jnp.float32), A, h0,
+        )
+        new_state = {"conv": new_conv, "h": h_last} if state is not None else None
+    y = y + p["m_D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = adapted_matmul(y, p["m_out"], (adp or {}).get("mamba_out"))
+    return shard(out, "batch", None, None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
+    """Decode state stacked over leading dims ``n`` (e.g. (n_groups, 7))."""
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((*n, batch, cfg.mamba_d_conv - 1, di), dtype),
+        "h": jnp.zeros((*n, batch, di, cfg.mamba_d_state), jnp.float32),
+    }

@@ -1,0 +1,436 @@
+"""Decoder LM covering every assigned family.
+
+Layers are organized into *groups* scanned with ``jax.lax.scan`` so HLO size
+is O(1) in depth (essential for the 512-device dry-run compiles):
+
+* dense / audio : group = 1 transformer layer
+* moe           : group = 1 layer with MoE FFN
+* hybrid (jamba): group = ``hybrid_period`` (8) layers — 7 Mamba + 1
+                  attention mixer, FFN alternating dense/MoE
+* ssm (xlstm)   : group = the block pattern (mLSTM + sLSTM)
+* vlm           : group = ``cross_attn_every`` (5) layers — 4 self-attn + 1
+                  gated cross-attn against image embeddings
+
+Each group carries its adapter slices under ``groups["adapters"][module]``,
+so the PEFT factors ride through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter_api import adapted_matmul
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import rms_norm, stacked_dense_init
+from repro.sharding import shard
+
+Pytree = Any
+
+
+def _tslice(tree: Pytree, i: int) -> Pytree:
+    return jax.tree_util.tree_map(lambda t: t[i], tree)
+
+
+def _adp_for(adapters: Optional[Dict], module: str) -> Optional[Dict]:
+    if not adapters or module not in adapters:
+        return None
+    # drop rank metadata before handing to adapted_matmul
+    return {
+        proj: {k: v for k, v in leaf.items() if k != "ranks"}
+        for proj, leaf in adapters[module].items()
+    }
+
+
+def gated_mlp(p: Dict, x: jax.Array, adp: Optional[Dict] = None) -> jax.Array:
+    adp = adp or {}
+    g = adapted_matmul(x, p["w_gate"], adp.get("w_gate"))
+    u = adapted_matmul(x, p["w_up"], adp.get("w_up"))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "ff")
+    return shard(adapted_matmul(h, p["w_down"], adp.get("w_down")), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_params(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, V = cfg.d_model, cfg.vocab_size
+    ks = iter(jax.random.split(key, 32))
+    G = cfg.n_layers // cfg.group_size
+    groups: Dict[str, Pytree] = {}
+
+    fam = cfg.family
+    if fam in ("dense", "audio", "moe"):
+        groups["ln1"] = jnp.ones((G, d), dtype)
+        groups["ln2"] = jnp.ones((G, d), dtype)
+        groups["attn"] = attn_lib.init_attn_params(next(ks), cfg, G, dtype)
+        if cfg.is_moe:
+            groups["moe"] = moe_lib.init_moe_params(next(ks), cfg, G, dtype)
+        else:
+            groups["mlp"] = {
+                "w_gate": stacked_dense_init(next(ks), G, d, cfg.d_ff, dtype),
+                "w_up": stacked_dense_init(next(ks), G, d, cfg.d_ff, dtype),
+                "w_down": stacked_dense_init(
+                    next(ks), G, cfg.d_ff, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+                ),
+            }
+    elif fam == "hybrid":
+        P = cfg.hybrid_period
+        n_mamba, n_moe, n_dense = P - 1, P // 2, P - P // 2 - 1
+        groups["ln_mixer"] = jnp.ones((G, P, d), dtype)
+        groups["ln_ffn"] = jnp.ones((G, P, d), dtype)
+        groups["attn"] = attn_lib.init_attn_params(next(ks), cfg, G, dtype)
+        mam = mamba_lib.init_mamba_params(next(ks), cfg, G * n_mamba, dtype)
+        groups["mamba"] = jax.tree_util.tree_map(
+            lambda t: t.reshape(G, n_mamba, *t.shape[1:]), mam
+        )
+        moe = moe_lib.init_moe_params(next(ks), cfg, G * n_moe, dtype)
+        groups["moe"] = jax.tree_util.tree_map(
+            lambda t: t.reshape(G, n_moe, *t.shape[1:]), moe
+        )
+        mlp = {
+            "w_gate": stacked_dense_init(next(ks), G * n_dense, d, cfg.d_ff, dtype),
+            "w_up": stacked_dense_init(next(ks), G * n_dense, d, cfg.d_ff, dtype),
+            "w_down": stacked_dense_init(
+                next(ks), G * n_dense, cfg.d_ff, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+            ),
+        }
+        groups["mlp"] = jax.tree_util.tree_map(
+            lambda t: t.reshape(G, n_dense, *t.shape[1:]), mlp
+        )
+    elif fam == "ssm":
+        pat = cfg.xlstm_pattern
+        groups["ln"] = jnp.ones((G, len(pat), d), dtype)
+        if "m" in pat:
+            groups["mlstm"] = xlstm_lib.init_mlstm_params(next(ks), cfg, G, dtype)
+        if "s" in pat:
+            groups["slstm"] = xlstm_lib.init_slstm_params(next(ks), cfg, G, dtype)
+    elif fam == "vlm":
+        P = cfg.cross_attn_every
+        n_self = P - 1
+        groups["ln1"] = jnp.ones((G, P, d), dtype)
+        groups["ln2"] = jnp.ones((G, P, d), dtype)
+        att = attn_lib.init_attn_params(next(ks), cfg, G * n_self, dtype)
+        groups["attn"] = jax.tree_util.tree_map(
+            lambda t: t.reshape(G, n_self, *t.shape[1:]), att
+        )
+        groups["xattn"] = attn_lib.init_attn_params(next(ks), cfg, G, dtype, cross=True)
+        mlp = {
+            "w_gate": stacked_dense_init(next(ks), G * P, d, cfg.d_ff, dtype),
+            "w_up": stacked_dense_init(next(ks), G * P, d, cfg.d_ff, dtype),
+            "w_down": stacked_dense_init(
+                next(ks), G * P, cfg.d_ff, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+            ),
+        }
+        groups["mlp"] = jax.tree_util.tree_map(lambda t: t.reshape(G, P, *t.shape[1:]), mlp)
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    params = {
+        "embed": (jax.random.normal(next(ks), (V, d), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "unembed": (jax.random.normal(next(ks), (d, V), jnp.float32) * (d**-0.5)).astype(dtype),
+        "groups": groups,
+    }
+    if fam == "vlm":
+        params["img_proj"] = stacked_dense_init(next(ks), 1, cfg.d_image, d, dtype)[0]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Group bodies — (x, cache_slice) → (x, new_cache_slice, aux)
+# ---------------------------------------------------------------------------
+
+
+def _ckpt(fn, train: bool):
+    """Per-position remat inside multi-layer groups: during the group's
+    backward only ONE layer's intermediates are live (without this, a
+    jamba group holds 7 Mamba layers' recomputed state tensors at once)."""
+    if not train:
+        return fn
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+    )
+
+
+def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False):
+    fam = cfg.family
+    adapters = p.get("adapters")
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Pytree] = {}
+
+    if fam in ("dense", "audio", "moe"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        out, nc = attn_lib.attention(
+            p["attn"], h, cfg, positions=positions,
+            adp=_adp_for(adapters, "attn"),
+            cache=cache_sl.get("attn") if cache_sl else None,
+        )
+        if nc is not None:
+            new_cache["attn"] = nc
+        x = x + out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = moe_lib.moe_ffn(p["moe"], h, cfg)
+        else:
+            y = gated_mlp(p["mlp"], h, _adp_for(adapters, "mlp"))
+        x = x + y
+
+    elif fam == "hybrid":
+        P = cfg.hybrid_period
+        mi = di = oi = 0
+        nm_state = {"conv": [], "h": []}
+        for i in range(P):
+            h = rms_norm(x, p["ln_mixer"][i], cfg.norm_eps)
+            if i == cfg.hybrid_attn_index:
+                out, nc = _ckpt(
+                    lambda h: attn_lib.attention(
+                        p["attn"], h, cfg, positions=positions,
+                        adp=_adp_for(adapters, "attn"),
+                        cache=cache_sl.get("attn") if cache_sl else None,
+                    ),
+                    train,
+                )(h)
+                if nc is not None:
+                    new_cache["attn"] = nc
+            else:
+                mp = _tslice(p["mamba"], mi)
+                st = _tslice(cache_sl["mamba"], mi) if cache_sl else None
+                out, ns = _ckpt(
+                    lambda h, mp=mp, st=st: mamba_lib.mamba_mixer(
+                        mp, h, cfg, state=st, adp=_adp_for(adapters, "mamba")
+                    ),
+                    train,
+                )(h)
+                if ns is not None:
+                    nm_state["conv"].append(ns["conv"])
+                    nm_state["h"].append(ns["h"])
+                mi += 1
+            x = x + out
+            h = rms_norm(x, p["ln_ffn"][i], cfg.norm_eps)
+            if i % 2 == 1:
+                y, a = _ckpt(
+                    lambda h, oi=oi: moe_lib.moe_ffn(_tslice(p["moe"], oi), h, cfg),
+                    train,
+                )(h)
+                aux = aux + a
+                oi += 1
+            else:
+                y = _ckpt(
+                    lambda h, di=di: gated_mlp(
+                        _tslice(p["mlp"], di), h, _adp_for(adapters, "mlp")
+                    ),
+                    train,
+                )(h)
+                di += 1
+            x = x + y
+        if nm_state["conv"]:
+            new_cache["mamba"] = {
+                "conv": jnp.stack(nm_state["conv"]),
+                "h": jnp.stack(nm_state["h"]),
+            }
+
+    elif fam == "ssm":
+        for j, kind in enumerate(cfg.xlstm_pattern):
+            h = rms_norm(x, p["ln"][j], cfg.norm_eps)
+            if kind == "m":
+                st = cache_sl.get("mlstm") if cache_sl else None
+                out, ns = _ckpt(
+                    lambda h, st=st: xlstm_lib.mlstm_mixer(
+                        p["mlstm"], h, cfg, state=st, adp=_adp_for(adapters, "mlstm")
+                    ),
+                    train,
+                )(h)
+                if ns is not None:
+                    new_cache["mlstm"] = ns
+            else:
+                st = cache_sl.get("slstm") if cache_sl else None
+                out, ns = _ckpt(
+                    lambda h, st=st: xlstm_lib.slstm_mixer(
+                        p["slstm"], h, cfg, state=st, adp=_adp_for(adapters, "slstm")
+                    ),
+                    train,
+                )(h)
+                if ns is not None:
+                    new_cache["slstm"] = ns
+            x = x + out
+
+    elif fam == "vlm":
+        P = cfg.cross_attn_every
+        for i in range(P - 1):
+            h = rms_norm(x, p["ln1"][i], cfg.norm_eps)
+            ap = _adp_for(adapters, "attn")
+            ap = jax.tree_util.tree_map(lambda t: t[i], ap) if ap else None
+            st = _tslice(cache_sl["attn"], i) if cache_sl else None
+            out, nc = _ckpt(
+                lambda h, i=i, ap=ap, st=st: attn_lib.attention(
+                    _tslice(p["attn"], i), h, cfg, positions=positions, adp=ap, cache=st
+                ),
+                train,
+            )(h)
+            if nc is not None:
+                new_cache.setdefault("attn", []).append(nc)
+            x = x + out
+            h = rms_norm(x, p["ln2"][i], cfg.norm_eps)
+            x = x + _ckpt(
+                lambda h, i=i: gated_mlp(_tslice(p["mlp"], i), h), train
+            )(h)
+        # gated cross-attention layer
+        h = rms_norm(x, p["ln1"][P - 1], cfg.norm_eps)
+        out, _ = attn_lib.attention(
+            p["xattn"], h, cfg, positions=positions,
+            adp=_adp_for(adapters, "xattn"), cross_kv=img,
+        )
+        x = x + jnp.tanh(p["xattn"]["xa_gate"]).astype(x.dtype) * out
+        h = rms_norm(x, p["ln2"][P - 1], cfg.norm_eps)
+        x = x + gated_mlp(_tslice(p["mlp"], P - 1), h)
+        if "attn" in new_cache:
+            new_cache["attn"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_cache["attn"]
+            )
+    else:
+        raise ValueError(fam)
+
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params, cfg, tokens, embeds):
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"][tokens]
+    return shard(x, "batch", None, None)
+
+
+def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, train):
+    groups = params["groups"]
+
+    def body(carry, xs):
+        x, aux = carry
+        p, cache_sl = xs
+        x, new_c, a = _group_body(
+            cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat
+        )
+        return (x, aux + a), new_c
+
+    f = body
+    if train and cfg.remat:
+        f = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+        )
+
+    if cfg.scan_layers:
+        (x, aux), new_cache = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), (groups, cache))
+    else:
+        G = jax.tree_util.tree_leaves(groups)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        ncs = []
+        for i in range(G):
+            (x, aux), nc = f((x, aux), (_tslice(groups, i), _tslice(cache, i) if cache is not None else None))
+            ncs.append(nc)
+        new_cache = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs) if ncs[0] is not None else None
+        )
+    return x, aux, new_cache
+
+
+def decoder_apply(
+    params, cfg: ModelConfig, tokens=None, embeds=None, image_embeds=None, train=True
+):
+    """Full-sequence forward → (logits (B,S,V), aux_loss)."""
+    x = _embed_input(params, cfg, tokens, embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    img = None
+    if cfg.family == "vlm":
+        img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
+    x, aux, _ = _run_groups(params, cfg, x, positions, None, img, decode=False, train=train)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
+    )
+    return shard(logits, "batch", None, "vocab"), aux
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    G = cfg.n_layers // cfg.group_size
+    fam = cfg.family
+    cache: Dict[str, Pytree] = {"pos": jnp.zeros((), jnp.int32)}
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+
+    def kv(n_lead):
+        return {
+            "k": jnp.zeros((*n_lead, batch, max_len, KV, dh), dtype),
+            "v": jnp.zeros((*n_lead, batch, max_len, KV, dh), dtype),
+            "idx": jnp.zeros(n_lead, jnp.int32),
+        }
+
+    if fam in ("dense", "audio", "moe"):
+        cache["layers"] = {"attn": kv((G,))}
+    elif fam == "hybrid":
+        cache["layers"] = {
+            "attn": kv((G,)),
+            "mamba": mamba_lib.init_mamba_state(
+                cfg, batch, (G, cfg.hybrid_period - 1), dtype
+            ),
+        }
+    elif fam == "ssm":
+        layers = {}
+        if "m" in cfg.xlstm_pattern:
+            layers["mlstm"] = xlstm_lib.init_mlstm_state(cfg, batch, (G,), dtype)
+        if "s" in cfg.xlstm_pattern:
+            layers["slstm"] = xlstm_lib.init_slstm_state(cfg, batch, (G,), dtype)
+        cache["layers"] = layers
+    elif fam == "vlm":
+        cache["layers"] = {"attn": kv((G, cfg.cross_attn_every - 1))}
+    return cache
+
+
+def decoder_prefill(params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None):
+    """Fill the cache with a prompt; returns (last-position logits, cache)."""
+    x = _embed_input(params, cfg, tokens, embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    img = None
+    if cfg.family == "vlm":
+        img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
+    x, _, new_layers = _run_groups(
+        params, cfg, x, positions, cache["layers"], img, decode=False, train=False
+    )
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
+    )
+    return logits[:, 0], {"pos": jnp.asarray(S, jnp.int32), "layers": new_layers}
+
+
+def decoder_decode(params, cfg: ModelConfig, cache, token=None, embeds=None, image_embeds=None):
+    """One decode step. token (B,1) int32 (or embeds (B,1,d))."""
+    x = _embed_input(params, cfg, token, embeds)
+    positions = cache["pos"][None]
+    img = None
+    if cfg.family == "vlm":
+        img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
+    x, _, new_layers = _run_groups(
+        params, cfg, x, positions, cache["layers"], img, decode=True, train=False
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
+    )
+    return logits[:, 0], {"pos": cache["pos"] + 1, "layers": new_layers}

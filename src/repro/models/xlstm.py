@@ -1,0 +1,277 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential with hidden-to-hidden recurrence).
+
+mLSTM has two mathematically-equivalent forms (property-tested against each
+other):
+
+* training/prefill — log-space parallel form, chunked over query blocks so
+  score memory is O(S·chunk);
+* decode — stabilized recurrent form with state (C, n, m).
+
+sLSTM is inherently sequential (recurrent R matrix): ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter_api import adapted_matmul
+from repro.models.layers import rms_norm, stacked_dense_init
+from repro.sharding import shard
+
+_Q_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_params(key, cfg: ModelConfig, n: int, dtype) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    di = 2 * d  # proj factor 2
+    ks = jax.random.split(key, 6)
+    return {
+        "x_up": stacked_dense_init(ks[0], n, d, 2 * di, dtype),
+        "m_conv": (jax.random.normal(ks[1], (n, di, 4), jnp.float32) * 0.5).astype(dtype),
+        "x_qkv": stacked_dense_init(ks[2], n, di, 3 * di, dtype),
+        "x_gates": (jax.random.normal(ks[3], (n, di, 2 * H), jnp.float32) * 0.02),
+        "x_gates_b": jnp.concatenate(
+            [jnp.zeros((n, H)), jnp.full((n, H), 3.0)], axis=-1
+        ).astype(jnp.float32),
+        "head_norm": jnp.ones((n, di), dtype),
+        "x_down": stacked_dense_init(
+            ks[4], n, di, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _mlstm_parallel(q, k, v, ig, lf):
+    """q,k,v (B,S,H,dh); ig (B,S,H) log input gate; lf (B,S,H) log forget.
+
+    Chunked over queries; returns (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    scale = dh**-0.5
+    lf_cum = jnp.cumsum(lf, axis=1)  # (B,S,H) inclusive Σ log f
+    a = ig - lf_cum  # per-key log weight (B,S,H)
+    m_run = jax.lax.cummax(a, axis=1)  # running max over keys
+    c = min(_Q_CHUNK, S)
+    n_chunks = (S + c - 1) // c
+    pad = n_chunks * c - S
+
+    def pad1(x, fill=0.0):
+        if not pad:
+            return x
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2), constant_values=fill)
+
+    qp = pad1(q).reshape(B, n_chunks, c, H, dh).transpose(1, 0, 2, 3, 4)
+    lfc = pad1(lf_cum).reshape(B, n_chunks, c, H).transpose(1, 0, 2, 3)
+    mrc = pad1(m_run, -1e30).reshape(B, n_chunks, c, H).transpose(1, 0, 2, 3)
+    kpos = jnp.arange(S)
+
+    def body(_, inp):
+        qc, lfq, mq, i = inp  # per-chunk
+        qpos = i * c + jnp.arange(c)
+        # log weight w_ij = lf_cum_i - lf_cum_j + ig_j   for j ≤ i
+        w = lfq[:, :, None, :] + (a)[:, None, :, :]  # (B,c,S,H)
+        # m_run_i = max_j≤i (ig_j - lf_cum_j); full stabilizer = lf_cum_i + m_run_i
+        stab = lfq + mq  # (B,c,H)
+        w = w - stab[:, :, None, :]
+        causal = (kpos[None, :] <= qpos[:, None])[None, :, :, None]
+        wexp = jnp.where(causal, jnp.exp(jnp.minimum(w, 0.0)), 0.0)  # (B,c,S,H)
+        s_raw = jnp.einsum("bchd,bshd->bcsh", qc, k, preferred_element_type=jnp.float32) * scale
+        sw = s_raw * wexp
+        num = jnp.einsum("bcsh,bshd->bchd", sw, v.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(sw.sum(2)), jnp.exp(-stab))  # (B,c,H)
+        return None, (num / den[..., None]).astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qp, lfc, mrc, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * c, H, dh)
+    return out[:, :S]
+
+
+def _mlstm_recurrent_step(state, q, k, v, ig, lf):
+    """One decode step. state: C (B,H,dh,dh), n (B,H,dh), m (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    scale = dh**-0.5
+    m_new = jnp.maximum(lf + m, ig)  # (B,H)
+    fprime = jnp.exp(lf + m - m_new)[..., None]
+    iprime = jnp.exp(ig - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = C * fprime[..., None] + iprime[..., None] * (
+        v32[:, :, :, None] * k32[:, :, None, :]
+    )  # (B,H,dh_v,dh_k)
+    n_new = n * fprime + iprime * k32
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q32) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q32)) * scale, jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_mixer(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+    adp: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    from repro.models.mamba import _causal_conv
+
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    decode = state is not None and S == 1
+
+    up = adapted_matmul(x, p["x_up"], (adp or {}).get("x_up"))
+    u, z = jnp.split(up, 2, axis=-1)  # (B,S,di) each
+    u = shard(u, "batch", None, "ff")
+    xc, new_conv = _causal_conv(u, p["m_conv"], state["conv"] if decode else None)
+    xc = jax.nn.silu(xc)
+    # q, k from the conv'd path; v from the raw up-projection (xLSTM block).
+    qkv_c = adapted_matmul(xc, p["x_qkv"], (adp or {}).get("x_qkv"))
+    q, k, _ = jnp.split(qkv_c, 3, axis=-1)
+    v = u @ p["x_qkv"][..., 2 * di :]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh)
+    v = v.reshape(B, S, H, dh)
+    gates = xc.astype(jnp.float32) @ p["x_gates"] + p["x_gates_b"]  # (B,S,2H)
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(fg)
+
+    if decode:
+        inner = {"C": state["C"], "n": state["n"], "m": state["m"]}
+        new_inner, h = _mlstm_recurrent_step(
+            inner, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], lf[:, 0]
+        )
+        h = h[:, None]
+        new_state = {"conv": new_conv, **new_inner}
+    else:
+        h = _mlstm_parallel(q, k, v, ig, lf)
+        new_state = None
+        if state is not None:  # prefill: also materialize the final (C, n, m)
+            lf_cum = jnp.cumsum(lf, axis=1)  # (B,S,H)
+            b = ig - lf_cum
+            m_end = lf_cum[:, -1] + jnp.max(b, axis=1)  # (B,H)
+            w = jnp.exp(lf_cum[:, -1:] - lf_cum + ig - m_end[:, None])  # (B,S,H)
+            k32 = k.astype(jnp.float32) * w[..., None]
+            C_end = jnp.einsum("bshv,bshk->bhvk", v.astype(jnp.float32), k32)
+            n_end = jnp.sum(k32, axis=1)
+            new_state = {"conv": new_conv, "C": C_end, "n": n_end, "m": m_end}
+    h = h.reshape(B, S, di)
+    h = rms_norm(h, p["head_norm"], cfg.norm_eps)
+    out = adapted_matmul(h * jax.nn.silu(z), p["x_down"], (adp or {}).get("x_down"))
+    return shard(out, "batch", None, None), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    return {
+        "conv": jnp.zeros((*n, batch, 3, di), dtype),
+        "C": jnp.zeros((*n, batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((*n, batch, H, dh), jnp.float32),
+        "m": jnp.full((*n, batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_params(key, cfg: ModelConfig, n: int, dtype) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ffd = max(1, int(4 * d / 3 / 2) * 2)
+    return {
+        "x_qkv": stacked_dense_init(ks[0], n, d, 4 * d, dtype),  # z,i,f,o pre-acts
+        "x_rec": (jax.random.normal(ks[1], (n, H, dh, 4 * dh), jnp.float32) / np.sqrt(dh)).astype(
+            jnp.float32
+        ),
+        "x_gates_b": jnp.tile(
+            jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))])[None],
+            (n, 1),
+        ).astype(jnp.float32),
+        "head_norm": jnp.ones((n, d), dtype),
+        "x_up": stacked_dense_init(ks[2], n, d, 2 * ffd, dtype),
+        "x_down": stacked_dense_init(
+            ks[3], n, ffd, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _slstm_step(cfg: ModelConfig, p, state, wx_t):
+    """state: c,n,h (B,d) fp32, m (B,d). wx_t: (B,4d) input pre-activation."""
+    c, n, h, m = state
+    B = wx_t.shape[0]
+    H = cfg.n_heads
+    d = c.shape[-1]
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhk,hkj->bhj", hh, p["x_rec"]).reshape(B, 4 * d)
+    pre = wx_t.astype(jnp.float32) + rec + p["x_gates_b"]
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    iprime = jnp.exp(it - m_new)
+    fprime = jnp.exp(lf + m - m_new)
+    c_new = fprime * c + iprime * z
+    n_new = jnp.maximum(fprime * n + iprime, jnp.exp(-m_new))
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_mixer(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+    adp: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    decode = state is not None and S == 1
+    wx = adapted_matmul(x, p["x_qkv"], (adp or {}).get("x_qkv"))  # (B,S,4d)
+    if decode:
+        st = (state["c"], state["n"], state["h"], state["m"])
+        st = _slstm_step(cfg, p, st, wx[:, 0])
+        hs = st[2][:, None].astype(x.dtype)
+        new_state = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+    else:
+        init = tuple(
+            jnp.full((B, d), -1e30, jnp.float32) if i == 3 else jnp.zeros((B, d), jnp.float32)
+            for i in range(4)
+        )
+
+        def step(carry, wx_t):
+            new = _slstm_step(cfg, p, carry, wx_t)
+            return new, new[2]
+
+        st, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_state = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]} if state is not None else None
+    hs = rms_norm(hs, p["head_norm"], cfg.norm_eps)
+    # gated FFN (pf 4/3)
+    ug = adapted_matmul(hs, p["x_up"], (adp or {}).get("x_up"))
+    u, g = jnp.split(ug, 2, axis=-1)
+    out = adapted_matmul(u * jax.nn.silu(g), p["x_down"], (adp or {}).get("x_down"))
+    return shard(out, "batch", None, None), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((*n, batch, d), jnp.float32),
+        "n": jnp.zeros((*n, batch, d), jnp.float32),
+        "h": jnp.zeros((*n, batch, d), jnp.float32),
+        "m": jnp.full((*n, batch, d), -1e30, jnp.float32),
+    }

@@ -1,0 +1,77 @@
+"""AdamW in pure JAX, operating on *partitioned* trainable pytrees.
+
+The trainable tree may contain ``None`` leaves (frozen side of
+``adapter_api.partition``); optimizer state is only materialized for real
+leaves — a QR-LoRA fine-tune of a 398B model carries optimizer state for a
+few thousand λ scalars only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def _map(f, *trees):
+    """tree_map treating None as an empty leaf (passes None through)."""
+    return jax.tree_util.tree_map(
+        lambda *xs: None if xs[0] is None else f(*xs),
+        *trees,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def adamw_init(trainable: Pytree) -> Pytree:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": _map(zeros, trainable),
+        "v": _map(zeros, trainable),
+    }
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [x for x in jax.tree_util.tree_leaves(tree) if x is not None]
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    grads: Pytree, state: Pytree, params: Pytree, cfg: AdamWConfig
+) -> Tuple[Pytree, Pytree, dict]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = _map(lambda g: g * scale, grads)
+    lr = cfg.schedule(step) if cfg.schedule is not None else cfg.lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    m = _map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g.astype(jnp.float32), state["m"], grads)
+    v = _map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+
+    def upd(p, mm, vv):
+        mhat = mm / b1c
+        vhat = vv / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = _map(upd, params, m, v)
+    return new_params, {"step": step, "m": m, "v": v}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,127 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+``compressed_grad_sync`` replaces the implicit fp32 gradient all-reduce with
+an explicit shard_map collective in int8-quantized form:
+
+  1. error-feedback add:  g ← g + e          (residual from last step)
+  2. per-leaf symmetric quantization to int8 (scale = max|g| / 127)
+  3. psum in int16 — exact for ≤ 256 participants (127·256 < 2¹⁵)
+  4. dequantize; new residual e ← g − dequant(q)
+
+Halves DP collective bytes vs fp32 (4B → 2B on the wire) with error feedback
+keeping convergence (Karimireddy et al., 2019).  For QR-LoRA's few-hundred-
+parameter gradients this is moot — it exists for the full-FT baselines and
+is validated by unit tests + the dry-run collective-bytes delta.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+def quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int16)
+    return q, scale
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grad_sync(
+    grads: Pytree, err: Optional[Pytree], mesh, dp_axes: Tuple[str, ...]
+) -> Tuple[Pytree, Pytree]:
+    """grads: *local* (unreduced) gradient pytree; returns (synced, new_err).
+
+    Must run inside shard_map context where ``dp_axes`` are manual axes —
+    use :func:`wrap_grad_fn` to get local grads under pjit.
+    """
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+
+    def sync(g, e):
+        if g is None:
+            return None, None
+        g32 = g.astype(jnp.float32) + (0.0 if e is None else e)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        smax = jax.lax.pmax(scale, dp_axes)  # shared scale across replicas
+        q2 = jnp.clip(jnp.round(g32 / smax), -127, 127).astype(jnp.int16)
+        qsum = jax.lax.psum(q2, dp_axes)
+        synced = qsum.astype(jnp.float32) * smax / n
+        new_e = g32 - q2.astype(jnp.float32) * smax
+        return synced, new_e
+
+    flat_g, td = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
+    flat_e = (
+        jax.tree_util.tree_leaves(err, is_leaf=lambda x: x is None)
+        if err is not None
+        else [None] * len(flat_g)
+    )
+    out = [sync(g, e) for g, e in zip(flat_g, flat_e)]
+    synced = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    return synced, new_err
+
+
+def init_error_state(trainable: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p: None if p is None else jnp.zeros_like(p, jnp.float32),
+        trainable,
+        is_leaf=lambda x: x is None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification with error feedback (Deep Gradient Compression,
+# Lin et al. 2018) — the aggressive-regime alternative to int8: keep the
+# k largest-magnitude entries per leaf, accumulate the rest locally.
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify(g: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sparse g with only the top-k magnitudes kept, residual)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(g.shape)
+    return kept, g - kept
+
+
+def topk_grad_sync(
+    grads: Pytree, err: Optional[Pytree], dp_axes: Tuple[str, ...], frac: float = 0.01
+) -> Tuple[Pytree, Pytree]:
+    """Error-feedback top-k gradient exchange (inside shard_map).
+
+    The psum itself is dense (XLA collectives have no sparse wire format);
+    on real deployments the win comes from pairing this with int8 (sparse
+    values quantize harder) — here it provides the CONVERGENCE-preserving
+    sparsification substrate, unit-tested for the EF contract."""
+
+    def sync(g, e):
+        if g is None:
+            return None, None
+        g32 = g.astype(jnp.float32) + (0.0 if e is None else e)
+        kept, resid = topk_sparsify(g32, frac)
+        synced = jax.lax.psum(kept, dp_axes) if dp_axes else kept
+        return synced, resid
+
+    flat_g, td = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
+    flat_e = (
+        jax.tree_util.tree_leaves(err, is_leaf=lambda x: x is None)
+        if err is not None
+        else [None] * len(flat_g)
+    )
+    out = [sync(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree_util.tree_unflatten(td, [o[0] for o in out]),
+        jax.tree_util.tree_unflatten(td, [o[1] for o in out]),
+    )

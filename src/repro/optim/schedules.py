@@ -1,0 +1,28 @@
+"""LR schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(
+    kind: str = "cosine",
+    base_lr: float = 1e-3,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup_steps)
+        if kind == "constant":
+            decay = 1.0
+        elif kind == "linear":
+            decay = 1.0 - (1.0 - min_ratio) * jnp.clip(
+                (s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+            )
+        else:  # cosine
+            t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+            decay = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * jnp.minimum(1.0, warm) * decay
+
+    return fn

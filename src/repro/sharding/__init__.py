@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    axis_rules,
+    logical_spec,
+    set_mesh,
+    get_mesh,
+    shard,
+    param_sharding_rules,
+)

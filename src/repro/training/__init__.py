@@ -1,0 +1,6 @@
+from repro.training.steps import (  # noqa: F401
+    init_train_state,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)

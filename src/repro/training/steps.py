@@ -1,0 +1,179 @@
+"""Train / prefill / decode step functions.
+
+``train_step`` is PEFT-aware: parameters are partitioned into
+(trainable, frozen) — gradients and optimizer state exist only for the
+trainable side, so a QR-LoRA run of a 398B model differentiates w.r.t. a
+few thousand λ scalars while the frozen tree flows through as constants.
+
+Gradient accumulation (``cfg.microbatches``) runs as a ``lax.scan`` over
+microbatch slices — the standard activation-memory lever for the train_4k
+shapes at scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import adapter_api
+from repro.models.model_zoo import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import shard
+
+Pytree = Any
+
+MOE_AUX_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array, weights: jax.Array):
+    """Cross-entropy + z-loss, fp32, mean over weighted positions.
+
+    The gold logit is extracted with a masked sum rather than
+    ``take_along_axis`` — the gather would force GSPMD to all-gather the
+    vocab-sharded fp32 logits; the masked sum stays sharded and reduces with
+    a scalar psum."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    ce = lse - gold
+    zl = jnp.square(lse)
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    return (ce * w).sum() / denom, (zl * w).sum() / denom
+
+
+def _model_inputs(cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """batch → (apply kwargs, targets, weights)."""
+    if cfg.family == "audio":
+        embeds = batch["embeds"]
+        tgt = batch["targets"]
+        w = jnp.ones_like(tgt, jnp.float32)
+        return {"embeds": embeds}, tgt, w
+    tokens = batch["tokens"]  # (B, S)
+    inp = tokens
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    w = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32), jnp.zeros_like(tokens[:, :1], jnp.float32)],
+        axis=1,
+    )
+    kw = {"tokens": inp}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = batch["image_embeds"]
+    return kw, tgt, w
+
+
+def init_train_state(
+    model: Model, key, opt_cfg: Optional[AdamWConfig] = None, params: Optional[Pytree] = None
+) -> Pytree:
+    params = model.init(key) if params is None else params
+    mask = model.trainable_mask(params)
+    trainable, frozen = adapter_api.partition(params, mask)
+    return {
+        "trainable": trainable,
+        "frozen": frozen,
+        "opt": adamw_init(trainable),
+    }
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    cfg = model.cfg
+
+    def loss_fn(trainable, frozen, mb):
+        # stop_gradient on the frozen side: PEFT never needs weight
+        # cotangents, and cutting them at trace level (instead of trusting
+        # DCE through shard_map/collectives) removes the fp32 weight-grad
+        # tensors from the backward entirely (observed −40 GiB/dev on the
+        # jamba train cell — EXPERIMENTS.md §Perf H3).
+        frozen = jax.tree_util.tree_map(
+            lambda x: None if x is None else jax.lax.stop_gradient(x),
+            frozen,
+            is_leaf=lambda x: x is None,
+        )
+        params = adapter_api.merge(trainable, frozen)
+        kw, tgt, w = _model_inputs(cfg, mb)
+        logits, aux = model.apply(params, train=True, **kw)
+        ce, zl = lm_loss(logits, tgt, w)
+        loss = ce + Z_LOSS_COEF * zl + MOE_AUX_COEF * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Pytree, batch: Dict[str, jax.Array]):
+        trainable, frozen = state["trainable"], state["frozen"]
+        k = cfg.microbatches
+        if k > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+            )
+
+            def acc(carry, mb):
+                gsum, lsum, csum = carry
+                (loss, m), g = grad_fn(trainable, frozen, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: None if a is None else a + b.astype(jnp.float32),
+                    gsum, g, is_leaf=lambda x: x is None,
+                )
+                return (gsum, lsum + loss, csum + m["ce"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+                trainable, is_leaf=lambda x: x is None,
+            )
+            (gsum, lsum, csum), _ = jax.lax.scan(acc, (g0, 0.0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: None if g is None else g / k, gsum, is_leaf=lambda x: x is None
+            )
+            loss, ce = lsum / k, csum / k
+        else:
+            (loss, m), grads = grad_fn(trainable, frozen, batch)
+            ce = m["ce"]
+
+        new_trainable, new_opt, om = adamw_update(grads, state["opt"], trainable, opt_cfg)
+        new_state = {"trainable": new_trainable, "frozen": frozen, "opt": new_opt}
+        metrics = {"loss": loss, "ce": ce, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    cfg = model.cfg
+
+    def prefill_step(params, cache, batch):
+        kw = {}
+        if cfg.family == "audio":
+            kw["embeds"] = batch["embeds"]
+        else:
+            kw["tokens"] = batch["tokens"]
+        if cfg.family == "vlm":
+            kw["image_embeds"] = batch["image_embeds"]
+        return model.prefill(params, cache, **kw)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    cfg = model.cfg
+
+    def decode_step(params, cache, batch):
+        kw = {}
+        if cfg.family == "audio":
+            kw["embeds"] = batch["embeds"]
+        else:
+            kw["token"] = batch["token"]
+        if cfg.family == "vlm":
+            kw["image_embeds"] = batch["image_embeds"]
+        logits, cache = model.decode_step(params, cache, **kw)
+        # greedy next token, shaped (B, 1) so it feeds the next decode step
+        # directly (sampling lives host-side)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return decode_step

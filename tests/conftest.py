@@ -1,0 +1,9 @@
+import os
+
+# keep single-device semantics for unit tests (the dry-run sets its own flag
+# in a subprocess); cap compile threads for the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

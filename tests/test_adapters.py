@@ -1,0 +1,130 @@
+"""Adapter layer: QR-LoRA semantics, baselines, masking, counting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AdapterConfig, ModelConfig
+from repro.core import adapter_api
+from repro.core.adapter_api import (
+    adapted_matmul,
+    init_adapters,
+    layer_selection_mask,
+    merge,
+    merge_adapter,
+    partition,
+    trainable_mask,
+)
+from repro.core.qr_lora import qr_lora_init_single
+
+
+def _cfg(mode="qr_lora", **kw):
+    a = dict(mode=mode, targets=("wq",), layers="last4", tau=0.5, rank_cap=16)
+    a.update(kw)
+    return ModelConfig(
+        name="t", family="dense", n_layers=6, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=100, adapter=AdapterConfig(**a),
+    )
+
+
+@pytest.fixture
+def stacked_weight():
+    key = jax.random.PRNGKey(0)
+    return jax.random.normal(key, (6, 32, 32)) * jnp.linspace(1, 0.05, 32)[None, None, :]
+
+
+def test_qr_delta_zero_at_init(stacked_weight):
+    adps, _ = init_adapters(jax.random.PRNGKey(0), _cfg(), {"wq": stacked_weight}, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    for l in range(6):
+        sl = {k: v[l] for k, v in adps["wq"].items() if k != "ranks"}
+        np.testing.assert_allclose(
+            adapted_matmul(x, stacked_weight[l], sl), x @ stacked_weight[l], rtol=1e-6
+        )
+
+
+def test_qr_full_rank_lambda_one_recovers_weight():
+    """With cap=d and λ=1, B·diag(λ)·A == W0 exactly (QR reconstruction)."""
+    W = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(2), (16, 16)), np.float32
+    )
+    adp, r = qr_lora_init_single(
+        jnp.asarray(W), AdapterConfig(mode="qr_lora", rank_policy="energy", tau=1.0, rank_cap=16),
+        dtype=jnp.float32,
+    )
+    assert r == 16
+    lam = jnp.ones((16,))
+    delta = np.asarray((adp["B"] * lam[None, :]) @ adp["A"])
+    np.testing.assert_allclose(delta, W, atol=1e-4)
+
+
+def test_merge_equals_forward(stacked_weight):
+    adps, _ = init_adapters(jax.random.PRNGKey(0), _cfg(), {"wq": stacked_weight}, jnp.float32)
+    sl = {k: np.asarray(v[5]) for k, v in adps["wq"].items() if k != "ranks"}
+    sl["lam"] = np.random.default_rng(0).normal(size=sl["lam"].shape).astype(np.float32)
+    sl = {k: jnp.asarray(v) for k, v in sl.items()}
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    np.testing.assert_allclose(
+        adapted_matmul(x, stacked_weight[5], sl),
+        x @ merge_adapter(stacked_weight[5], sl),
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("mode", ["lora", "svd_lora"])
+def test_baselines_preserve_init(mode, stacked_weight):
+    cfg = _cfg(mode=mode, layers="all", rank=2, svd_k=1, alpha=2.0)
+    adps, new_w = init_adapters(jax.random.PRNGKey(0), cfg, {"wq": stacked_weight}, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    sc = adapter_api.adapter_scale(cfg.adapter)
+    sl = {k: v[2] for k, v in adps["wq"].items() if k != "ranks"}
+    np.testing.assert_allclose(
+        adapted_matmul(x, new_w["wq"][2], sl, scale=sc), x @ stacked_weight[2], atol=2e-5
+    )
+
+
+def test_layer_selection_mask():
+    assert layer_selection_mask("all", 4) == (True,) * 4
+    assert layer_selection_mask("last4", 6) == (False, False, True, True, True, True)
+    assert layer_selection_mask((0, 2), 4) == (True, False, True, False)
+
+
+def test_trainable_mask_and_grads(stacked_weight):
+    cfg = _cfg()
+    adps, _ = init_adapters(jax.random.PRNGKey(0), cfg, {"wq": stacked_weight}, jnp.float32)
+    params = {"layers": {"wq": stacked_weight, "adapters": {"wq": adps["wq"]}}}
+    mask = trainable_mask(params, cfg)
+    t, f = partition(params, mask)
+    assert merge(t, f)["layers"]["wq"] is stacked_weight
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+
+    def loss(t):
+        p = merge(t, f)
+        sl = {k: v[5] for k, v in p["layers"]["adapters"]["wq"].items() if k != "ranks"}
+        return jnp.sum(adapted_matmul(x, p["layers"]["wq"][5], sl) ** 2)
+
+    g = jax.grad(loss)(t)
+    lam_g = g["layers"]["adapters"]["wq"]["lam"]
+    ranks = np.asarray(adps["wq"]["ranks"])
+    # grads exist exactly on the selected ranks of adapted layers
+    assert int(jnp.sum(lam_g[5] != 0)) == ranks[5]
+    assert bool(jnp.all(lam_g[0] == 0))
+
+
+def test_param_counting_matches_ranks(stacked_weight):
+    cfg = _cfg()
+    adps, _ = init_adapters(jax.random.PRNGKey(0), cfg, {"wq": stacked_weight}, jnp.float32)
+    params = {"layers": {"wq": stacked_weight, "adapters": {"wq": adps["wq"]}}}
+    n = adapter_api.count_trainable_params(params, cfg)
+    assert n == int(np.asarray(adps["wq"]["ranks"]).sum())
+
+
+def test_tau_sweep_rank_grows(stacked_weight):
+    """Paper Table 1: higher τ → more parameters."""
+    counts = []
+    for tau in (0.5, 0.7, 0.8):
+        cfg = _cfg(tau=tau, rank_cap=32)
+        adps, _ = init_adapters(jax.random.PRNGKey(0), cfg, {"wq": stacked_weight}, jnp.float32)
+        counts.append(int(np.asarray(adps["wq"]["ranks"]).sum()))
+    assert counts[0] <= counts[1] <= counts[2]
+    assert counts[0] < counts[2]

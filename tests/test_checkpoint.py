@@ -1,0 +1,62 @@
+"""Checkpointing: roundtrip (incl. bfloat16 and None leaves), atomicity
+layout, retention, async save, metadata."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "a": jax.random.normal(k, (4, 8)),
+        "b": {"c": jax.random.normal(k, (3,)).astype(jnp.bfloat16), "d": None},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"), {"step": 7})
+    r = restore_pytree(t, str(tmp_path / "ck"))
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    assert r["b"]["d"] is None
+    assert r["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_manager_retention_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (10, 20, 30):
+        m.save(s, t, blocking=True)
+    assert m.latest_step() == 30
+    assert m.all_steps() == [20, 30]  # 10 GC'd
+
+
+def test_manager_async_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    m.save(5, t, blocking=False)
+    m.wait()
+    r, meta = m.restore(t)
+    assert meta["step"] == 5
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    bad = dict(t)
+    bad["zz"] = jnp.zeros(3)
+    with pytest.raises(KeyError):
+        restore_pytree(bad, str(tmp_path / "ck"))
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree(), blocking=True)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU):
+shape/dtype sweeps per kernel + gradient checks for the fused matmul."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+KS = jax.random.split(KEY, 8)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# qrlora_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,K,N,r", [(64, 128, 96, 16), (256, 512, 256, 160), (33, 48, 80, 8), (8, 256, 128, 4)]
+)
+def test_qrlora_matmul(M, K, N, r, dtype):
+    x = (jax.random.normal(KS[0], (M, K)) * 0.3).astype(dtype)
+    W = (jax.random.normal(KS[1], (K, N)) * 0.1).astype(dtype)
+    B = (jax.random.normal(KS[2], (K, r)) * 0.1).astype(dtype)
+    A = (jax.random.normal(KS[3], (r, N)) * 0.1).astype(dtype)
+    lam = jax.random.normal(KS[4], (r,), jnp.float32)
+    y = ops.qrlora_matmul(x, W, B, A, lam, 0.7)
+    yr = ref.qrlora_matmul_ref(x, W, B, A, lam, 0.7)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), **_tol(dtype)
+    )
+
+
+def test_qrlora_matmul_batched_rank3():
+    x = jax.random.normal(KS[0], (2, 16, 64)) * 0.3
+    W = jax.random.normal(KS[1], (64, 32)) * 0.1
+    B = jax.random.normal(KS[2], (64, 8)) * 0.1
+    A = jax.random.normal(KS[3], (8, 32)) * 0.1
+    lam = jax.random.normal(KS[4], (8,), jnp.float32)
+    y = ops.qrlora_matmul(x, W, B, A, lam, 1.0)
+    yr = ref.qrlora_matmul_ref(x.reshape(-1, 64), W, B, A, lam).reshape(2, 16, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+
+
+def test_qrlora_matmul_grads_match_ref():
+    x = jax.random.normal(KS[0], (32, 64)) * 0.3
+    W = jax.random.normal(KS[1], (64, 48)) * 0.1
+    B = jax.random.normal(KS[2], (64, 8)) * 0.1
+    A = jax.random.normal(KS[3], (8, 48)) * 0.1
+    lam = jax.random.normal(KS[4], (8,), jnp.float32)
+
+    gk = jax.grad(lambda x, l: jnp.sum(ops.qrlora_matmul(x, W, B, A, l, 0.5) ** 2), (0, 1))(x, lam)
+    gr = jax.grad(lambda x, l: jnp.sum(ref.qrlora_matmul_ref(x, W, B, A, l, 0.5) ** 2), (0, 1))(x, lam)
+    np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gr[1]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,KV,dh", [(2, 128, 128, 4, 2, 64), (1, 256, 256, 8, 8, 32), (2, 96, 96, 6, 3, 16)]
+)
+def test_flash_attention(B, Sq, Sk, H, KV, dh, causal, dtype):
+    q = (jax.random.normal(KS[5], (B, Sq, H, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(KS[6], (B, Sk, KV, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(KS[7], (B, Sk, KV, dh)) * 0.5).astype(dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    orf = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(orf, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KV,dh,L",
+    [(2, 256, 4, 2, 64, 100), (1, 512, 8, 8, 32, 512), (3, 128, 6, 3, 16, 1), (2, 128, 4, 4, 32, 127)],
+)
+def test_decode_attention(B, S, H, KV, dh, L, dtype):
+    q = (jax.random.normal(KS[5], (B, H, dh)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(KS[6], (B, S, KV, dh)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(KS[7], (B, S, KV, dh)) * 0.5).astype(dtype)
+    o = ops.decode_attention(q, kc, vc, jnp.asarray(L), bk=64)
+    orf = ref.decode_attention_ref(q, kc, vc, jnp.asarray(L))
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(orf, np.float32), **_tol(dtype)
+    )

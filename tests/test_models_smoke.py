@@ -1,0 +1,87 @@
+"""Per-arch smoke tests (required deliverable f): REDUCED config of the same
+family — forward + one train step on CPU, asserting shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_reduced
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+ARCHS = all_archs() + ["roberta_base"]
+
+
+def _batch_for(cfg, B=2, S=16, key=jax.random.PRNGKey(1)):
+    kw = {}
+    if cfg.family == "audio":
+        kw["embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32) * 0.1
+        kw["targets"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        kw["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_image), jnp.float32
+        )
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    kw = _batch_for(cfg, B, S)
+    apply_kw = {k: v for k, v in kw.items() if k != "targets"}
+    out, aux = model.apply(params, **apply_kw)
+    if cfg.is_encoder:
+        assert out.shape == (B, max(cfg.n_classes, 1))
+    else:
+        assert out.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    assert model.count_trainable(params) > 0
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_one_train_step(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    kw = _batch_for(cfg, B=2, S=16)
+    batch = {k: v for k, v in kw.items() if k in ("tokens", "embeds", "targets", "image_embeds")}
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # λ actually moved (QR-LoRA trains)
+    before = jax.tree_util.tree_leaves(state["trainable"])
+    after = jax.tree_util.tree_leaves(new_state["trainable"])
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b)) for a, b in zip(before, after)
+    )
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_param_count_analytic_close(arch):
+    """Analytic count (used for MODEL_FLOPS) tracks the real full config."""
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    published = {
+        # the ASSIGNED dims (48L, 64e, d_ff=1408) pencil out to ~28B total
+        # (~3.5B active — the "a3b"); we follow the assignment sheet.
+        "moonshot-v1-16b-a3b": 28e9,
+        "mixtral-8x22b": 141e9,
+        "qwen2-0.5b": 0.5e9,
+        "qwen3-14b": 14.8e9,
+        "smollm-135m": 0.135e9,
+        "qwen2.5-32b": 32.5e9,
+        "llama-3.2-vision-11b": 10.6e9,
+        "jamba-1.5-large-398b": 398e9,
+        "musicgen-medium": 1.5e9,
+        "xlstm-125m": 0.125e9,
+    }[cfg.name]
+    assert 0.5 * published < n < 1.7 * published, (cfg.name, n, published)

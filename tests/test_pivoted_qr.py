@@ -1,0 +1,106 @@
+"""Pivoted QR: reconstruction, orthonormality, ordering, scipy agreement,
+and rank-selection rules — including hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pivoted_qr import (
+    qr_pivoted,
+    qr_pivoted_np,
+    select_rank_energy,
+    select_rank_magnitude,
+    unpermute_columns,
+)
+
+try:
+    import scipy.linalg as sla
+
+    HAVE_SCIPY = True
+except ImportError:
+    HAVE_SCIPY = False
+
+
+def _rand(L, M, seed=0, decay=True):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(L, M)).astype(np.float32)
+    if decay:
+        W = W @ np.diag(np.linspace(1, 0.01, M)).astype(np.float32)
+    return W
+
+
+@pytest.mark.parametrize("L,M", [(8, 8), (16, 8), (8, 16), (96, 96), (64, 40)])
+def test_reconstruction_and_orthonormality(L, M):
+    W = _rand(L, M)
+    Q, R, perm = map(np.asarray, qr_pivoted(jnp.asarray(W)))
+    K = min(L, M)
+    assert Q.shape == (L, K) and R.shape == (K, M)
+    np.testing.assert_allclose(W[:, perm], Q @ R, atol=5e-5)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(K), atol=5e-5)
+    # unpermuted reconstruction
+    Rt = np.asarray(unpermute_columns(jnp.asarray(R), jnp.asarray(perm)))
+    np.testing.assert_allclose(W, Q @ Rt, atol=5e-5)
+
+
+@pytest.mark.parametrize("L,M", [(32, 32), (48, 24)])
+def test_diagonal_ordering_and_sign(L, M):
+    W = _rand(L, M, seed=3)
+    _, R, _ = qr_pivoted(jnp.asarray(W))
+    d = np.abs(np.diag(np.asarray(R)))
+    assert np.all(np.diag(np.asarray(R))[: min(L, M)] >= -1e-6)  # sign convention
+    assert np.all(d[:-1] >= d[1:] - 1e-4)  # pivoting order
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+@pytest.mark.parametrize("seed", range(3))
+def test_matches_scipy_pivoting(seed):
+    W = _rand(40, 40, seed=seed)
+    Q, R, perm = map(np.asarray, qr_pivoted(jnp.asarray(W)))
+    Qs, Rs, ps = sla.qr(W, pivoting=True, mode="economic")
+    assert np.array_equal(perm, ps)
+    np.testing.assert_allclose(
+        np.abs(np.diag(R)), np.abs(np.diag(Rs)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_numpy_ref_agrees():
+    W = _rand(24, 24, seed=7)
+    Qj, Rj, pj = map(np.asarray, qr_pivoted(jnp.asarray(W)))
+    Qn, Rn, pn = qr_pivoted_np(W)
+    assert np.array_equal(pj, pn)
+    np.testing.assert_allclose(Rj, Rn, atol=1e-4)
+    np.testing.assert_allclose(Qj, Qn, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.integers(4, 24),
+    M=st.integers(4, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_property_reconstruction(L, M, seed):
+    W = _rand(L, M, seed=seed, decay=False)
+    Q, R, perm = map(np.asarray, qr_pivoted(jnp.asarray(W)))
+    np.testing.assert_allclose(W[:, perm], Q @ R, atol=1e-4)
+    d = np.abs(np.diag(R))
+    assert np.all(d[:-1] >= d[1:] - 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(tau1=st.floats(0.1, 0.9), tau2=st.floats(0.1, 0.9))
+def test_property_rank_monotone_in_tau(tau1, tau2):
+    """paper eq. 4: larger τ keeps more energy → larger (or equal) rank."""
+    rdiag = jnp.linspace(1.0, 0.01, 128)
+    lo, hi = min(tau1, tau2), max(tau1, tau2)
+    assert int(select_rank_energy(rdiag, lo)) <= int(select_rank_energy(rdiag, hi))
+    # magnitude rule is anti-monotone (bigger τ → stricter threshold)
+    assert int(select_rank_magnitude(rdiag, hi)) <= int(select_rank_magnitude(rdiag, lo))
+
+
+def test_energy_rank_exact():
+    # two directions hold 50%+ of energy → r=2 at tau=0.5
+    rdiag = jnp.asarray([2.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0])
+    assert int(select_rank_energy(rdiag, 0.5)) == 2
+    # τ=1.0: full energy is reached at r=7 (the last diagonal is zero)
+    assert int(select_rank_energy(rdiag, 1.0)) == 7
+    assert int(select_rank_magnitude(rdiag, 0.9)) == 2
