@@ -19,6 +19,7 @@ MODULES = [
     ("fig1_tradeoff", "benchmarks.fig1_tradeoff"),
     ("kernel", "benchmarks.kernel_bench"),
     ("train_throughput", "benchmarks.train_throughput"),
+    ("serve_multitenant", "benchmarks.serve_multitenant"),
 ]
 
 

@@ -1,0 +1,87 @@
+"""Multi-tenant serving benchmark: shared-decode throughput vs tenant count.
+
+Measures the continuous-batching engine at increasing tenant heterogeneity
+(1 tenant = homogeneous batch … n_lanes distinct tenants) and the cost of
+the batched multi-λ gather vs the plain single-adapter matmul, plus the
+per-tenant device-state accounting that motivates λ-only serving.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, emit
+from repro.configs import get_config, get_reduced
+from repro.kernels import ref
+from repro.serving import BASE_TENANT, MultiTenantEngine, random_lambda
+
+
+def bench_engine_throughput():
+    arch = "smollm-135m"
+    cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
+    lanes, gen, prompt_len, max_len = (8, 16, 16, 64) if SCALE != "paper" else (16, 64, 64, 256)
+    rng = np.random.default_rng(0)
+    for n_tenants in (1, 4, lanes):
+        eng = MultiTenantEngine(
+            cfg, n_lanes=lanes, n_slots=max(8, n_tenants + 1), max_len=max_len
+        )
+        tenants = [BASE_TENANT]
+        for i in range(1, n_tenants):
+            t = f"t{i}"
+            eng.add_tenant(t, random_lambda(jax.random.PRNGKey(i), eng.params, 0.1))
+            tenants.append(t)
+        for lane in range(lanes):
+            prompt = rng.integers(2, cfg.vocab_size, size=prompt_len).astype(np.int32)
+            eng.submit(tenants[lane % n_tenants], prompt, gen)
+        t0 = time.time()
+        eng.run()
+        dt = time.time() - t0
+        emit(
+            f"serve_multitenant:engine:tenants={n_tenants}",
+            dt / max(eng.steps, 1) * 1e6,
+            f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes};"
+            f"bytes_per_tenant={eng.registry.bytes_per_tenant()}",
+        )
+
+
+def bench_bgmv_overhead():
+    """Multi-λ gather vs single-λ fused matmul (XLA formula, jitted)."""
+    M, K, N, r, n_slots = 256, 768, 768, 160, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32) * 0.3
+    W = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.05
+    B = jax.random.normal(ks[2], (K, r), jnp.float32) * 0.05
+    A = jax.random.normal(ks[3], (r, N), jnp.float32) * 0.05
+    tab = jax.random.normal(ks[4], (n_slots, r), jnp.float32)
+    seg = jax.random.randint(ks[5], (M,), 0, n_slots)
+
+    single = jax.jit(lambda: ref.qrlora_matmul_ref(x, W, B, A, tab[1]))
+    multi = jax.jit(lambda: ref.qrlora_bgmv_ref(x, W, B, A, tab, seg))
+    for f in (single, multi):
+        jax.block_until_ready(f())
+    t0 = time.time()
+    n = 10
+    for _ in range(n):
+        jax.block_until_ready(single())
+    t_single = (time.time() - t0) / n * 1e6
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(multi())
+    t_multi = (time.time() - t0) / n * 1e6
+    emit(
+        "serve_multitenant:bgmv_vs_single",
+        t_multi,
+        f"single_us={t_single:.0f};overhead={t_multi/max(t_single,1e-9):.2f}x;slots={n_slots}",
+    )
+
+
+def main():
+    bench_bgmv_overhead()
+    bench_engine_throughput()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Multi-tenant serving example: N adapters (distinct λ), one decode batch.
+
+Each tenant is a QR-LoRA λ checkpoint over the shared frozen base; the
+engine batches them together with per-lane adapter-slot ids and verifies
+every tenant against its merged-weight single-adapter deployment.
+
+    PYTHONPATH=src python examples/serve_multi_tenant.py --tenants 4
+"""
+import argparse
+
+from repro.launch.serve_multi import main as serve_multi_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=12)
+    args = ap.parse_args()
+    serve_multi_main([
+        "--arch", args.arch, "--reduced",
+        "--tenants", str(args.tenants),
+        "--lanes", str(args.tenants),
+        "--gen-len", str(args.gen_len),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point — the exact command ROADMAP.md names as the gate.
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -54,16 +54,47 @@ def adapted_matmul(
     W: jax.Array,
     adp: Optional[Dict[str, jax.Array]],
     scale: float = 1.0,
-    kernel: str = "xla",
+    kernel: str = "auto",
 ) -> jax.Array:
     """``y = x·W + ((x·B)*λ)·A·scale`` — the fused adapter matmul.
 
     ``kernel="pallas"`` routes through the Pallas TPU kernel (see
     ``repro/kernels/qrlora_matmul.py``); "xla" is the portable path used for
     distributed lowering.
+
+    Multi-tenant serving: when ``adp`` carries ``"seg"`` (per-sequence
+    adapter-slot ids, int32 ``(batch,)``) its ``"lam"`` leaf is a packed λ
+    *table* ``(n_slots, r)`` and every row of x applies its own tenant's λ:
+    ``y[b] = x[b]·W + ((x[b]·B) * Λ[seg[b]])·A`` (slot 0 is the all-zero
+    base-model tenant).  ``kernel="pallas"`` uses the BGMV kernel
+    (``repro/kernels/qrlora_bgmv.py``); "xla" gathers λ rows with ``take``.
     """
     if adp is None:
         return x @ W
+    seg = adp.get("seg")
+    if seg is not None:
+        from repro.sharding.rules import get_mesh
+
+        lam_table = adp["lam"]  # (n_slots, r)
+        # "auto": the BGMV kernel is the fast path on an unsharded real TPU;
+        # the take gather lowers everywhere else (CPU engine tests, and any
+        # installed mesh — pallas_call does not lower under GSPMD sharding).
+        if kernel == "pallas" or (
+            kernel == "auto"
+            and jax.default_backend() == "tpu"
+            and get_mesh() is None
+        ):
+            from repro.kernels import ops as _kops
+
+            return _kops.qrlora_bgmv(
+                x, W, adp["B"], adp["A"], lam_table, seg, scale=scale
+            )
+        lam_rows = jnp.take(lam_table, seg.astype(jnp.int32), axis=0)
+        lam_rows = lam_rows.reshape(
+            seg.shape[0], *([1] * (x.ndim - 2)), lam_table.shape[-1]
+        ).astype(x.dtype)
+        low = ((x @ adp["B"]) * lam_rows) @ adp["A"]
+        return x @ W + low * scale
     if kernel == "pallas":
         from repro.kernels import ops as _kops
 

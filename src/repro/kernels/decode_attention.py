@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.qrlora_matmul import CompilerParams
+
 _NEG = -1e30
 
 
@@ -95,7 +97,7 @@ def decode_attention_kernel(
             pltpu.VMEM((H, 1), jnp.float32),
             pltpu.VMEM((H, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

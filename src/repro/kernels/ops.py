@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels import ref as ref_ops
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.qrlora_bgmv import qrlora_bgmv_kernel
 from repro.kernels.qrlora_matmul import qrlora_matmul_kernel
 
 
@@ -33,6 +34,17 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), s
 
 
+def _matmul_blocking(x2, N, K):
+    """Shared tiling for the qrlora matmul kernels: pad rows to the bm
+    block, gcd-fit bn/bk.  Returns (padded x2, original M, bm, bn, bk)."""
+    M = x2.shape[0]
+    bm = 256 if M % 256 == 0 or M > 256 else M
+    x2, M0 = _pad_to(x2, bm, 0)
+    bn = int(np.gcd(N, 256))
+    bk = int(np.gcd(K, 512))
+    return x2, M0, bm, bn, bk
+
+
 # ---------------------------------------------------------------------------
 # qrlora_matmul with custom VJP (trains λ and x; W/B/A frozen → zero grads)
 # ---------------------------------------------------------------------------
@@ -46,20 +58,12 @@ def qrlora_matmul(x, W, B, A, lam, scale: float = 1.0):
 def _qrlora_fwd_impl(x, W, B, A, lam, scale):
     orig_shape = x.shape
     x2 = x.reshape(-1, x.shape[-1])
-    M, K = x2.shape
+    K = x2.shape[1]
     N = W.shape[1]
-    if not _on_tpu():
-        interpret = True
-    else:
-        interpret = False
-    bm = 256 if M % 256 == 0 or M > 256 else M
-    x2, M0 = _pad_to(x2, bm, 0)
-    if x2.shape[0] % bm:
-        bm = int(np.gcd(x2.shape[0], 256)) or x2.shape[0]
-    bn = int(np.gcd(N, 256))
-    bk = int(np.gcd(K, 512))
+    x2, M0, bm, bn, bk = _matmul_blocking(x2, N, K)
     y = qrlora_matmul_kernel(
-        x2, W, B, A, lam, scale=scale, bm=bm, bn=bn, bk=bk, interpret=interpret
+        x2, W, B, A, lam, scale=scale, bm=bm, bn=bn, bk=bk,
+        interpret=not _on_tpu(),
     )[:M0]
     return y.reshape(*orig_shape[:-1], N)
 
@@ -86,6 +90,37 @@ def _qrlora_bwd(scale, res, g):
 
 
 qrlora_matmul.defvjp(_qrlora_fwd, _qrlora_bwd)
+
+
+# ---------------------------------------------------------------------------
+# qrlora_bgmv — batched multi-λ adapter matmul (multi-tenant serving path)
+# ---------------------------------------------------------------------------
+
+
+def qrlora_bgmv(x, W, B, A, lam_table, seg, scale: float = 1.0):
+    """``y[m] = x[m]·W + ((x[m]·B) * Λ[seg[m]])·A·scale`` via the Pallas kernel.
+
+    ``x (..., K)``; ``seg`` is either per-*sequence* (``(batch,)`` for a
+    ``(batch, S, K)`` input — every token of a sequence shares its tenant's
+    λ) or per-row (``(M,)`` matching flattened x).  ``lam_table
+    (n_slots, r)`` fp32.  Inference-only (no VJP): serving never
+    differentiates through the λ gather.
+    """
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = W.shape[1]
+    seg = seg.astype(jnp.int32)
+    if x.ndim >= 3 and seg.shape[0] != M:
+        # per-sequence ids → per-row ids (tokens inherit the sequence slot)
+        seg = jnp.repeat(seg, M // seg.shape[0])
+    x2, M0, bm, bn, bk = _matmul_blocking(x2, N, K)
+    seg2, _ = _pad_to(seg, bm, 0)  # pad rows land in slot 0 (λ ≡ 0)
+    y = qrlora_bgmv_kernel(
+        x2, W, B, A, lam_table, seg2[:, None],
+        scale=scale, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu(),
+    )[:M0]
+    return y.reshape(*orig_shape[:-1], N)
 
 
 # ---------------------------------------------------------------------------

@@ -1,21 +1,23 @@
-"""Fused QR-LoRA matmul Pallas kernel.
+"""Batched multi-λ QR-LoRA matmul (BGMV) Pallas kernel.
 
-Computes ``y = x·W + ((x·B)·λ)·A·scale`` in a single pass so the adapter
-never materializes ΔW (an L×M HBM tensor) and x is read from HBM once.
+Multi-tenant serving: every QR-LoRA adapter of a layer shares the same
+frozen pivoted-QR factors (B, A) — tenants differ only in the λ vector.
+A heterogeneous batch therefore needs ONE extra gather, not per-tenant
+weights:
 
-Blocking (TPU, MXU-aligned 128-multiples):
+    y[m] = x[m]·W + ((x[m]·B) * Λ[seg[m]]) · A · scale
 
-  grid = (M/bm, N/bn, K/bk)  —  k innermost (arbitrary), m/n parallel.
+with ``Λ (n_slots, r)`` the packed per-tenant λ table and ``seg (M,)`` the
+per-row adapter-slot ids (slot 0 holds λ≡0, the base-model tenant).
 
-  * ``acc``  (bm, bn) fp32 VMEM scratch — the W-path accumulator.
-  * ``pacc`` (bm, r)  fp32 VMEM scratch — the x·B low-rank projection.
-    It only depends on (m, k), so it is accumulated during the FIRST
-    n-iteration of each m-row and reused for the remaining n-blocks —
-    the low-rank FLOPs are paid once per row-block, not once per tile.
+Blocking is identical to ``qrlora_matmul`` (grid (M/bm, N/bn, K/bk), k
+innermost, x·B projection accumulated once per row-block).  The per-row λ
+gather is expressed as a one-hot (bm, n_slots) × (n_slots, r) matmul at the
+emit step — MXU-friendly and free of dynamic-gather lowering restrictions;
+the λ table rides whole in VMEM (n_slots·r·4B, ~40 KB at 64 slots × r=160).
 
-At the last k-block the low-rank term ``(pacc·λ)·A_n`` is added and the
-tile is written out.  VMEM working set ≈ bm·bk + bk·bn + bm·bn + bk·r +
-r·bn (+ scratch) — defaults (256,256,512, r≤256) ≈ 1.2 MB << 16 MB VMEM.
+VMEM working set ≈ qrlora_matmul + n_slots·r + bm·n_slots — still ≪ 16 MB
+at the defaults.
 """
 from __future__ import annotations
 
@@ -26,11 +28,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams → CompilerParams across 0.4.x releases
-CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.kernels.qrlora_matmul import CompilerParams
 
 
-def _kernel(x_ref, w_ref, b_ref, a_ref, lam_ref, o_ref, acc_ref, pacc_ref, *, scale, nk, nn):
+def _kernel(
+    x_ref, w_ref, b_ref, a_ref, lam_ref, seg_ref, o_ref, acc_ref, pacc_ref,
+    *, scale, nk,
+):
     n, k = pl.program_id(1), pl.program_id(2)
 
     @pl.when(k == 0)
@@ -53,9 +57,14 @@ def _kernel(x_ref, w_ref, b_ref, a_ref, lam_ref, o_ref, acc_ref, pacc_ref, *, sc
 
     @pl.when(k == nk - 1)
     def _emit():
-        lam = lam_ref[...].astype(jnp.float32)
+        table = lam_ref[...].astype(jnp.float32)  # (n_slots, r)
+        seg = seg_ref[...]  # (bm, 1) int32
+        n_slots = table.shape[0]
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], n_slots), 1)
+        onehot = (slot_iota == seg).astype(jnp.float32)  # (bm, n_slots)
+        lam_rows = jnp.dot(onehot, table, preferred_element_type=jnp.float32)
         low = jnp.dot(
-            pacc_ref[...] * lam[None, :],
+            pacc_ref[...] * lam_rows,
             a_ref[...].astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
@@ -65,12 +74,13 @@ def _kernel(x_ref, w_ref, b_ref, a_ref, lam_ref, o_ref, acc_ref, pacc_ref, *, sc
 @functools.partial(
     jax.jit, static_argnames=("scale", "bm", "bn", "bk", "interpret")
 )
-def qrlora_matmul_kernel(
+def qrlora_bgmv_kernel(
     x: jax.Array,  # (M, K)
     W: jax.Array,  # (K, N)
     B: jax.Array,  # (K, r)
     A: jax.Array,  # (r, N)
-    lam: jax.Array,  # (r,)
+    lam_table: jax.Array,  # (n_slots, r)
+    seg: jax.Array,  # (M, 1) int32
     *,
     scale: float = 1.0,
     bm: int = 256,
@@ -81,21 +91,24 @@ def qrlora_matmul_kernel(
     M, K = x.shape
     N = W.shape[1]
     r = B.shape[1]
+    n_slots = lam_table.shape[0]
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
-        "caller (ops.qrlora_matmul) pads to block multiples"
+        "caller (ops.qrlora_bgmv) pads to block multiples"
     )
+    assert seg.shape == (M, 1), "seg must be (M, 1) int32 row slot-ids"
     nk, nn = K // bk, N // bn
     grid = (M // bm, nn, nk)
     return pl.pallas_call(
-        functools.partial(_kernel, scale=scale, nk=nk, nn=nn),
+        functools.partial(_kernel, scale=scale, nk=nk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # x
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # W
             pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),  # B
             pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),  # A
-            pl.BlockSpec((r,), lambda i, j, k: (0,)),  # lam
+            pl.BlockSpec((n_slots, r), lambda i, j, k: (0, 0)),  # Λ table
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),  # seg ids
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
@@ -107,4 +120,4 @@ def qrlora_matmul_kernel(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")
         ),
         interpret=interpret,
-    )(x, W, B, A, lam)
+    )(x, W, B, A, lam_table, seg)

@@ -15,6 +15,22 @@ def qrlora_matmul_ref(x, W, B, A, lam, scale: float = 1.0):
     return (y + low * scale).astype(x.dtype)
 
 
+def qrlora_bgmv_ref(x, W, B, A, lam_table, seg, scale: float = 1.0):
+    """Batched multi-λ adapter matmul: ``y_m = x_m·W + ((x_m·B) * Λ[seg_m])·A``.
+
+    x (M,K); W (K,N); B (K,r); A (r,N); Λ (n_slots,r) fp32; seg (M,) int32 —
+    per-row adapter-slot ids (slot 0 is the all-zero base-model tenant).
+    The gather is a plain XLA ``take`` so this path lowers anywhere.
+    """
+    lam_rows = jnp.take(lam_table, seg, axis=0).astype(jnp.float32)  # (M, r)
+    y = jnp.dot(x, W, preferred_element_type=jnp.float32)
+    low = jnp.dot(
+        jnp.dot(x, B, preferred_element_type=jnp.float32) * lam_rows,
+        A.astype(jnp.float32),
+    )
+    return (y + low * scale).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """q (B,Sq,H,dh); k,v (B,Sk,KV,dh) — GQA broadcast, fp32 softmax."""
     B, Sq, H, dh = q.shape

@@ -9,21 +9,25 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions: `axis_types` (and
+    `jax.sharding.AxisType`) only exist on newer releases — pass them when
+    available (explicit Auto axes), fall back to the bare call otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips/pod (v5e pod); 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Whatever this host has (tests / CPU examples)."""
     n = jax.device_count()
     dp = n // model_parallel
-    return jax.make_mesh(
-        (dp, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((dp, model_parallel), ("data", "model"))

@@ -191,18 +191,26 @@ def attention(
             k = shard(k, "batch", None, *nm)
             v = shard(v, "batch", None, *nm)
             q = shard(q, "batch", None, *nm)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            kpos = jnp.arange(cache["k"].shape[1])
+            if idx.ndim:  # per-lane write offsets (continuous batching)
+                upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0
+                )
+                ck = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), idx)
+                cv = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), idx)
+                mask = (kpos[None, :] <= idx[:, None])[:, None, None, None, :]
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+                mask = (kpos < idx + 1)[None, None, None, None, :]
             new_cache = {"k": ck, "v": cv, "idx": idx + 1}
-            kpos = jnp.arange(ck.shape[1])
-            mask = (kpos < idx + 1)[None, None, None, None, :]
             out = _softmax_attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, scale, decode=True, scores_dtype=sdt)
             o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
             return shard(o, "batch", None, None), new_cache
         else:  # prefill: write k/v into cache then run the train path
             ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
-            new_cache = {"k": ck, "v": cv, "idx": jnp.asarray(S, jnp.int32)}
+            new_cache = {"k": ck, "v": cv, "idx": jnp.full_like(cache["idx"], S)}
 
     Sk = k.shape[1]
     if S > _CHUNK_THRESHOLD:

@@ -129,25 +129,33 @@ class Model:
         return {**shapes, "groups": groups}
 
     # ---- forward ---------------------------------------------------------
-    def apply(self, params, tokens=None, embeds=None, image_embeds=None, train=True):
+    # ``seg_ids`` (int32 (batch,)) selects a per-sequence adapter slot when
+    # the params carry a packed multi-tenant λ table (see repro.serving).
+    def apply(self, params, tokens=None, embeds=None, image_embeds=None, train=True,
+              seg_ids=None):
         if self.cfg.is_encoder:
             return enc_lib.encoder_apply(params, self.cfg, tokens), jnp.zeros((), jnp.float32)
         return tfm_lib.decoder_apply(
             params, self.cfg, tokens=tokens, embeds=embeds,
-            image_embeds=image_embeds, train=train,
+            image_embeds=image_embeds, train=train, seg_ids=seg_ids,
         )
 
-    def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16):
-        return tfm_lib.init_decode_state(self.cfg, batch, max_len, dtype)
+    def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                          per_lane: bool = False):
+        return tfm_lib.init_decode_state(self.cfg, batch, max_len, dtype, per_lane=per_lane)
 
-    def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None):
+    def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None,
+                seg_ids=None):
         return tfm_lib.decoder_prefill(
-            params, self.cfg, cache, tokens=tokens, embeds=embeds, image_embeds=image_embeds
+            params, self.cfg, cache, tokens=tokens, embeds=embeds,
+            image_embeds=image_embeds, seg_ids=seg_ids,
         )
 
-    def decode_step(self, params, cache, token=None, embeds=None, image_embeds=None):
+    def decode_step(self, params, cache, token=None, embeds=None, image_embeds=None,
+                    seg_ids=None):
         return tfm_lib.decoder_decode(
-            params, self.cfg, cache, token=token, embeds=embeds, image_embeds=image_embeds
+            params, self.cfg, cache, token=token, embeds=embeds,
+            image_embeds=image_embeds, seg_ids=seg_ids,
         )
 
     # ---- PEFT helpers ------------------------------------------------------

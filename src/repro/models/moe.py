@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import stacked_dense_init
-from repro.sharding.rules import get_mesh, _rules
+from repro.sharding.rules import get_mesh, _rules, shard_map
 
 
 def init_moe_params(key, cfg: ModelConfig, n: int, dtype) -> Dict:
@@ -166,11 +166,10 @@ def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Arr
     psum_axis = model_ax if f_ok else None
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), we_spec, we_spec, wd_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )
     def run(xl, wr, wg, wu, wd):
         if d_ok:

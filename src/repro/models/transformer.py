@@ -38,14 +38,23 @@ def _tslice(tree: Pytree, i: int) -> Pytree:
     return jax.tree_util.tree_map(lambda t: t[i], tree)
 
 
-def _adp_for(adapters: Optional[Dict], module: str) -> Optional[Dict]:
+def _adp_for(
+    adapters: Optional[Dict], module: str, seg_ids: Optional[jax.Array] = None
+) -> Optional[Dict]:
     if not adapters or module not in adapters:
         return None
     # drop rank metadata before handing to adapted_matmul
-    return {
+    out = {
         proj: {k: v for k, v in leaf.items() if k != "ranks"}
         for proj, leaf in adapters[module].items()
     }
+    if seg_ids is not None:
+        # multi-tenant serving: per-sequence adapter-slot ids ride with each
+        # projection's dict; the "lam" leaf is then the packed λ table
+        # (n_slots, r) and adapted_matmul takes the BGMV path.
+        for proj in out:
+            out[proj]["seg"] = seg_ids
+    return out
 
 
 def gated_mlp(p: Dict, x: jax.Array, adp: Optional[Dict] = None) -> jax.Array:
@@ -163,7 +172,9 @@ def _ckpt(fn, train: bool):
     )
 
 
-def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False):
+def _group_body(
+    cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False, seg_ids=None
+):
     fam = cfg.family
     adapters = p.get("adapters")
     aux = jnp.zeros((), jnp.float32)
@@ -173,7 +184,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         out, nc = attn_lib.attention(
             p["attn"], h, cfg, positions=positions,
-            adp=_adp_for(adapters, "attn"),
+            adp=_adp_for(adapters, "attn", seg_ids),
             cache=cache_sl.get("attn") if cache_sl else None,
         )
         if nc is not None:
@@ -183,7 +194,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
         if cfg.is_moe:
             y, aux = moe_lib.moe_ffn(p["moe"], h, cfg)
         else:
-            y = gated_mlp(p["mlp"], h, _adp_for(adapters, "mlp"))
+            y = gated_mlp(p["mlp"], h, _adp_for(adapters, "mlp", seg_ids))
         x = x + y
 
     elif fam == "hybrid":
@@ -196,7 +207,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
                 out, nc = _ckpt(
                     lambda h: attn_lib.attention(
                         p["attn"], h, cfg, positions=positions,
-                        adp=_adp_for(adapters, "attn"),
+                        adp=_adp_for(adapters, "attn", seg_ids),
                         cache=cache_sl.get("attn") if cache_sl else None,
                     ),
                     train,
@@ -208,7 +219,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
                 st = _tslice(cache_sl["mamba"], mi) if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, mp=mp, st=st: mamba_lib.mamba_mixer(
-                        mp, h, cfg, state=st, adp=_adp_for(adapters, "mamba")
+                        mp, h, cfg, state=st, adp=_adp_for(adapters, "mamba", seg_ids)
                     ),
                     train,
                 )(h)
@@ -228,7 +239,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
             else:
                 y = _ckpt(
                     lambda h, di=di: gated_mlp(
-                        _tslice(p["mlp"], di), h, _adp_for(adapters, "mlp")
+                        _tslice(p["mlp"], di), h, _adp_for(adapters, "mlp", seg_ids)
                     ),
                     train,
                 )(h)
@@ -247,7 +258,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
                 st = cache_sl.get("mlstm") if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, st=st: xlstm_lib.mlstm_mixer(
-                        p["mlstm"], h, cfg, state=st, adp=_adp_for(adapters, "mlstm")
+                        p["mlstm"], h, cfg, state=st, adp=_adp_for(adapters, "mlstm", seg_ids)
                     ),
                     train,
                 )(h)
@@ -257,7 +268,7 @@ def _group_body(cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=
                 st = cache_sl.get("slstm") if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, st=st: xlstm_lib.slstm_mixer(
-                        p["slstm"], h, cfg, state=st, adp=_adp_for(adapters, "slstm")
+                        p["slstm"], h, cfg, state=st, adp=_adp_for(adapters, "slstm", seg_ids)
                     ),
                     train,
                 )(h)
@@ -317,14 +328,15 @@ def _embed_input(params, cfg, tokens, embeds):
     return shard(x, "batch", None, None)
 
 
-def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, train):
+def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, train, seg_ids=None):
     groups = params["groups"]
 
     def body(carry, xs):
         x, aux = carry
         p, cache_sl = xs
         x, new_c, a = _group_body(
-            cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat
+            cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat,
+            seg_ids=seg_ids,
         )
         return (x, aux + a), new_c
 
@@ -350,7 +362,8 @@ def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, trai
 
 
 def decoder_apply(
-    params, cfg: ModelConfig, tokens=None, embeds=None, image_embeds=None, train=True
+    params, cfg: ModelConfig, tokens=None, embeds=None, image_embeds=None, train=True,
+    seg_ids=None,
 ):
     """Full-sequence forward → (logits (B,S,V), aux_loss)."""
     x = _embed_input(params, cfg, tokens, embeds)
@@ -359,7 +372,9 @@ def decoder_apply(
     img = None
     if cfg.family == "vlm":
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
-    x, aux, _ = _run_groups(params, cfg, x, positions, None, img, decode=False, train=train)
+    x, aux, _ = _run_groups(
+        params, cfg, x, positions, None, img, decode=False, train=train, seg_ids=seg_ids
+    )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(
         "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
@@ -367,17 +382,31 @@ def decoder_apply(
     return shard(logits, "batch", None, "vocab"), aux
 
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, per_lane: bool = False
+):
+    """Decode cache.  ``per_lane=True`` gives every batch lane its own write
+    offset (``idx (…, batch)``) and position (``pos (batch,)``) so lanes can
+    hold sequences of different lengths — the continuous-batching layout
+    used by ``repro.serving``.  Default keeps the scalar lock-step layout."""
     G = cfg.n_layers // cfg.group_size
     fam = cfg.family
-    cache: Dict[str, Pytree] = {"pos": jnp.zeros((), jnp.int32)}
+    if per_lane and fam in ("hybrid", "ssm"):
+        raise NotImplementedError(
+            "per-lane decode state is attention-cache only (recurrent-state "
+            "lane management is a ROADMAP open item)"
+        )
+    cache: Dict[str, Pytree] = {
+        "pos": jnp.zeros((batch,) if per_lane else (), jnp.int32)
+    }
     KV, dh = cfg.n_kv_heads, cfg.d_head
 
     def kv(n_lead):
+        idx_shape = (*n_lead, batch) if per_lane else n_lead
         return {
             "k": jnp.zeros((*n_lead, batch, max_len, KV, dh), dtype),
             "v": jnp.zeros((*n_lead, batch, max_len, KV, dh), dtype),
-            "idx": jnp.zeros(n_lead, jnp.int32),
+            "idx": jnp.zeros(idx_shape, jnp.int32),
         }
 
     if fam in ("dense", "audio", "moe"):
@@ -401,7 +430,10 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bflo
     return cache
 
 
-def decoder_prefill(params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None):
+def decoder_prefill(
+    params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None,
+    seg_ids=None,
+):
     """Fill the cache with a prompt; returns (last-position logits, cache)."""
     x = _embed_input(params, cfg, tokens, embeds)
     S = x.shape[1]
@@ -410,24 +442,32 @@ def decoder_prefill(params, cfg: ModelConfig, cache, tokens=None, embeds=None, i
     if cfg.family == "vlm":
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
     x, _, new_layers = _run_groups(
-        params, cfg, x, positions, cache["layers"], img, decode=False, train=False
+        params, cfg, x, positions, cache["layers"], img, decode=False, train=False,
+        seg_ids=seg_ids,
     )
     x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(
         "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
     )
-    return logits[:, 0], {"pos": jnp.asarray(S, jnp.int32), "layers": new_layers}
+    # per-lane caches carry pos (B,); lock-step carries a scalar
+    new_pos = jnp.full_like(cache["pos"], S)
+    return logits[:, 0], {"pos": new_pos, "layers": new_layers}
 
 
-def decoder_decode(params, cfg: ModelConfig, cache, token=None, embeds=None, image_embeds=None):
+def decoder_decode(
+    params, cfg: ModelConfig, cache, token=None, embeds=None, image_embeds=None,
+    seg_ids=None,
+):
     """One decode step. token (B,1) int32 (or embeds (B,1,d))."""
     x = _embed_input(params, cfg, token, embeds)
-    positions = cache["pos"][None]
+    pos = cache["pos"]
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     img = None
     if cfg.family == "vlm":
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
     x, _, new_layers = _run_groups(
-        params, cfg, x, positions, cache["layers"], img, decode=True, train=False
+        params, cfg, x, positions, cache["layers"], img, decode=True, train=False,
+        seg_ids=seg_ids,
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(

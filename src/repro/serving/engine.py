@@ -1,0 +1,230 @@
+"""Multi-tenant serving engine: one decode loop, many adapters.
+
+Glues the pieces together:
+
+* :class:`~repro.serving.registry.AdapterRegistry` — packed λ slot tables,
+  installed into a parameter *view* (weights and QR factors shared).
+* :class:`~repro.serving.scheduler.ContinuousBatchScheduler` — FIFO queue
+  over fixed decode lanes.
+* the batched multi-λ adapter matmul — per-lane ``seg_ids`` flow through
+  ``Model.prefill`` / ``Model.decode_step`` into
+  ``adapter_api.adapted_matmul`` (XLA ``take`` gather or the
+  ``qrlora_bgmv`` Pallas kernel).
+* slot-indexed KV-cache management — the cache is ``per_lane=True`` (each
+  lane has its own write offset and position), admission prefills a single
+  request into a lane-1 cache and splices it into the shared cache, so
+  lanes hold sequences of different tenants, lengths, and ages.
+
+The engine is greedy-decode and host-driven: ``step()`` = admit + one
+decode step; ``run()`` loops until queue and lanes drain.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adapter_api
+from repro.models import build_model
+from repro.serving.registry import AdapterRegistry, extract_lambda
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
+
+Pytree = Any
+
+_LANE_FAMILIES = ("dense", "audio", "moe")
+
+
+class MultiTenantEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        params: Optional[Pytree] = None,
+        n_lanes: int = 4,
+        n_slots: int = 8,
+        max_len: int = 128,
+        collect_logits: bool = False,
+        seed: int = 0,
+    ):
+        if cfg.family not in _LANE_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching requires an attention KV cache "
+                f"(family {cfg.family!r} is a ROADMAP open item)"
+            )
+        if cfg.adapter.mode != "qr_lora":
+            raise ValueError("multi-λ serving is defined for qr_lora adapters")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (
+            params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        )
+        self.registry = AdapterRegistry.from_params(self.params, n_slots=n_slots)
+        self.scheduler = ContinuousBatchScheduler(n_lanes)
+        self.n_lanes, self.max_len = n_lanes, max_len
+        self.collect_logits = collect_logits
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.cache = self.model.init_decode_state(
+            n_lanes, max_len, self.dtype, per_lane=True
+        )
+        self._view_version = -1
+        self._view: Optional[Pytree] = None
+        self.steps = 0
+        self.decoded_tokens = 0
+
+        model = self.model
+
+        def _prefill(view, cache, tokens, seg):
+            return model.prefill(view, cache, tokens=tokens, seg_ids=seg)
+
+        def _decode(view, cache, tok, seg):
+            return model.decode_step(view, cache, token=tok, seg_ids=seg)
+
+        def _splice(big, small, lane):
+            pos = jax.lax.dynamic_update_slice_in_dim(
+                big["pos"], small["pos"], lane, axis=0
+            )
+            layers = jax.tree_util.tree_map(
+                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), lane, axis=1
+                ),
+                big["layers"],
+                small["layers"],
+            )
+            return {"pos": pos, "layers": layers}
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self._splice = jax.jit(_splice)
+
+    # -- tenants ------------------------------------------------------------
+
+    def add_tenant(self, tenant: str, lam_tree) -> int:
+        """Register/hot-swap a tenant's λ checkpoint; returns its slot."""
+        return self.registry.register(tenant, lam_tree)
+
+    def _params_view(self) -> Pytree:
+        if self.registry.version != self._view_version:
+            self._view = self.registry.install(self.params)
+            self._view_version = self.registry.version
+        return self._view
+
+    # -- requests -----------------------------------------------------------
+
+    def submit(self, tenant: str, prompt, max_new_tokens: int) -> Request:
+        if tenant not in self.registry:
+            raise KeyError(f"unknown tenant {tenant!r} — add_tenant() first")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + gen({max_new_tokens}) exceeds "
+                f"max_len={self.max_len}"
+            )
+        # pin from submission (not admission): a queued request must keep its
+        # tenant's slot resident until it finishes
+        self.registry.pin(tenant)
+        return self.scheduler.submit(tenant, prompt, max_new_tokens)
+
+    # -- the serving loop ---------------------------------------------------
+
+    def _admit(self, finished: List[Request]) -> None:
+        view = self._params_view()
+        for req in self.scheduler.admit():
+            req.slot = self.registry.lookup(req.tenant)  # pinned since submit
+            lane_cache = self.model.init_decode_state(
+                1, self.max_len, self.dtype, per_lane=True
+            )
+            seg = jnp.full((1,), req.slot, jnp.int32)
+            logits, lane_cache = self._prefill(
+                view, lane_cache, jnp.asarray(req.prompt)[None, :], seg
+            )
+            self.cache = self._splice(self.cache, lane_cache, req.lane)
+            self._emit(req, np.asarray(logits[0]), finished)
+
+    def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
+        req.tokens.append(int(logits_row.argmax()))
+        if self.collect_logits:
+            req.logits.append(logits_row)
+        self.decoded_tokens += 1
+        if req.done:
+            self.scheduler.finish(req)
+            self.registry.unpin(req.tenant)
+            finished.append(req)
+
+    def step(self) -> List[Request]:
+        """Admit waiting requests, run one shared decode step over all
+        lanes; returns requests that finished this step."""
+        finished: List[Request] = []
+        self._admit(finished)
+        active = self.scheduler.active()
+        if not active:
+            return finished
+        tok = np.zeros((self.n_lanes, 1), np.int32)
+        for req in active:
+            tok[req.lane, 0] = req.tokens[-1]
+        seg = jnp.asarray(self.scheduler.batch_composition())
+        view = self._params_view()
+        logits, self.cache = self._decode(view, self.cache, jnp.asarray(tok), seg)
+        logits_np = np.asarray(logits)
+        self.steps += 1
+        for req in active:
+            self._emit(req, logits_np[req.lane], finished)
+        return finished
+
+    def run(self) -> Dict[int, Request]:
+        """Drain the queue; returns uid → finished request."""
+        out: Dict[int, Request] = {}
+        while self.scheduler.has_work:
+            for req in self.step():
+                out[req.uid] = req
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant merged-weight reference (correctness oracle for the engine)
+# ---------------------------------------------------------------------------
+
+
+def merge_tenant_params(params: Pytree, cfg: ModelConfig, lam_tree) -> Pytree:
+    """Single-tenant params with λ folded into the weights and adapters
+    stripped — the classic one-adapter deployment (launch/serve.py)."""
+    scale = adapter_api.adapter_scale(cfg.adapter)
+    groups = dict(params["groups"])
+    adapters = groups.get("adapters", {})
+    for mod, projs in adapters.items():
+        mod_params = dict(groups[mod])
+        for proj, leaf in projs.items():
+            adp = {"B": leaf["B"], "A": leaf["A"], "lam": lam_tree[mod][proj]}
+            mod_params[proj] = adapter_api.merge_adapter(
+                mod_params[proj], adp, scale
+            )
+        groups[mod] = mod_params
+    groups["adapters"] = {}
+    return {**params, "groups": groups}
+
+
+def reference_decode(
+    cfg: ModelConfig, params: Pytree, lam_tree, prompt, n_tokens: int, max_len: int
+):
+    """Greedy decode of one prompt through merged weights (no adapters on
+    the runtime path); returns (tokens list, logits (n_tokens, V))."""
+    model = build_model(cfg)
+    merged = merge_tenant_params(params, cfg, lam_tree)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = model.init_decode_state(1, max_len, dtype)
+    logits, cache = model.prefill(merged, cache, tokens=jnp.asarray(prompt)[None, :])
+    toks, rows = [int(jnp.argmax(logits[0]))], [np.asarray(logits[0])]
+    for _ in range(n_tokens - 1):
+        logits, cache = model.decode_step(
+            merged, cache, token=jnp.asarray([[toks[-1]]], jnp.int32)
+        )
+        toks.append(int(jnp.argmax(logits[0])))
+        rows.append(np.asarray(logits[0]))
+    return toks, np.stack(rows)
+
+
+def base_lambda(params: Pytree) -> Dict[str, Dict[str, jax.Array]]:
+    """The base model's λ tree (all zeros) — tenant-shaped."""
+    return jax.tree_util.tree_map(jnp.zeros_like, extract_lambda(params))

@@ -1,0 +1,101 @@
+"""Continuous-batching scheduler: request queue + decode-lane management.
+
+The decode batch has a fixed number of *lanes* (rows of the shared KV
+cache).  Requests queue FIFO; whenever a lane frees up the next request is
+admitted — its prompt is prefilled into that lane while the other lanes
+keep decoding (prefill/decode interleaving happens at the engine step
+granularity).  Requests from different tenants share one decode batch: the
+per-lane adapter-slot ids are the ``seg_ids`` fed to the batched multi-λ
+kernel, so no lane ever waits for a same-tenant batch to form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request from one tenant."""
+
+    uid: int
+    tenant: str
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int
+    # filled by the engine:
+    lane: int = -1
+    slot: int = -1  # adapter slot id (0 = base model)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class ContinuousBatchScheduler:
+    """FIFO admission over a fixed set of decode lanes."""
+
+    def __init__(self, n_lanes: int):
+        assert n_lanes >= 1
+        self.n_lanes = n_lanes
+        self.queue: Deque[Request] = deque()
+        self.lanes: List[Optional[Request]] = [None] * n_lanes
+        self._next_uid = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(
+        self, tenant: str, prompt: np.ndarray, max_new_tokens: int
+    ) -> Request:
+        req = Request(
+            uid=self._next_uid,
+            tenant=tenant,
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=int(max_new_tokens),
+        )
+        self._next_uid += 1
+        self.queue.append(req)
+        return req
+
+    # -- lane management ----------------------------------------------------
+
+    def free_lanes(self) -> List[int]:
+        return [i for i, r in enumerate(self.lanes) if r is None]
+
+    def admit(self) -> List[Request]:
+        """Move queued requests into free lanes (FIFO); returns the newly
+        admitted requests with their ``lane`` assigned."""
+        admitted = []
+        for lane in self.free_lanes():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            req.lane = lane
+            self.lanes[lane] = req
+            admitted.append(req)
+        return admitted
+
+    def active(self) -> List[Request]:
+        return [r for r in self.lanes if r is not None]
+
+    def finish(self, req: Request) -> None:
+        assert self.lanes[req.lane] is req
+        self.lanes[req.lane] = None
+        req.lane = -1
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.lanes)
+
+    def batch_composition(self) -> np.ndarray:
+        """Per-lane adapter-slot ids (idle lanes → slot 0, the zero-λ base
+        tenant, so they add nothing but a masked matmul row)."""
+        seg = np.zeros((self.n_lanes,), np.int32)
+        for r in self.lanes:
+            if r is not None:
+                seg[r.lane] = r.slot
+        return seg

@@ -154,6 +154,8 @@ def make_prefill_step(model: Model):
             kw["tokens"] = batch["tokens"]
         if cfg.family == "vlm":
             kw["image_embeds"] = batch["image_embeds"]
+        if "seg_ids" in batch:  # multi-tenant λ-slot ids (repro.serving)
+            kw["seg_ids"] = batch["seg_ids"]
         return model.prefill(params, cache, **kw)
 
     return prefill_step
@@ -170,6 +172,8 @@ def make_decode_step(model: Model):
             kw["token"] = batch["token"]
         if cfg.family == "vlm":
             kw["image_embeds"] = batch["image_embeds"]
+        if "seg_ids" in batch:  # multi-tenant λ-slot ids (repro.serving)
+            kw["seg_ids"] = batch["seg_ids"]
         logits, cache = model.decode_step(params, cache, **kw)
         # greedy next token, shaped (B, 1) so it feeds the next decode step
         # directly (sampling lives host-side)

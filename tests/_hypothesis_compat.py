@@ -1,0 +1,68 @@
+"""Hypothesis shim: real library when installed, deterministic sweep otherwise.
+
+The property tests only use ``st.integers`` / ``st.floats`` with ``@given``
+and ``@settings``.  On a bare container without ``hypothesis`` we fall back
+to a fixed grid of boundary + interior samples per strategy so the
+properties still get exercised (just without shrinking / random search).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            vals = {min_value, max_value, mid, min(min_value + 1, max_value),
+                    max(max_value - 7, min_value)}
+            return _Strategy(sorted(vals))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            span = max_value - min_value
+            return _Strategy(
+                [min_value, max_value, min_value + 0.5 * span,
+                 min_value + 0.25 * span, min_value + 0.75 * span]
+            )
+
+    st = _Strategies()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            # NB: zero-arg wrapper without functools.wraps — copying the
+            # wrapped signature would make pytest treat the strategy
+            # parameters as fixtures.
+            def wrapper():
+                pools = [strategies[n].samples for n in names]
+                n_cases = max(len(p) for p in pools)
+                for i in range(n_cases):
+                    kw = {n: pools[j][i % len(pools[j])] for j, n in enumerate(names)}
+                    fn(**kw)
+                # a couple of cross-product cases beyond the diagonal
+                for combo in itertools.islice(itertools.product(*pools), 0, 6, 2):
+                    fn(**dict(zip(names, combo)))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

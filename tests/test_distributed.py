@@ -25,8 +25,8 @@ _SCRIPT = textwrap.dedent(
     from repro.launch import specs as S
     from repro.configs.base import ShapeConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     for arch in ["smollm_135m", "mixtral_8x22b", "jamba_1_5_large_398b"]:
         cfg = get_reduced(arch).replace(dtype="float32", microbatches=2)
@@ -67,8 +67,7 @@ _SCRIPT = textwrap.dedent(
     import tempfile
     d = tempfile.mkdtemp()
     save_pytree(params, d)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((4, 2), ("data", "model"))
     restored = restore_pytree(params, d)
     resharded = reshard_to_mesh(restored, mesh2)
     l0 = jax.tree_util.tree_leaves(params)[0]

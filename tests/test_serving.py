@@ -1,0 +1,246 @@
+"""Multi-tenant serving subsystem: registry eviction/hot-swap, scheduler
+admission & batch composition, the batched multi-λ kernel vs the XLA take
+reference, and the engine vs per-tenant merged-weight decodes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.kernels import ops, ref
+from repro.serving import (
+    BASE_TENANT,
+    AdapterRegistry,
+    ContinuousBatchScheduler,
+    MultiTenantEngine,
+    base_lambda,
+    random_lambda,
+    reference_decode,
+)
+
+KS = jax.random.split(jax.random.PRNGKey(0), 8)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SHAPES = {("attn", "wq"): (3, 8), ("mlp", "w_up"): (3, 8)}
+
+
+def _lam_tree(value):
+    out = {}
+    for (mod, proj), shape in SHAPES.items():
+        out.setdefault(mod, {})[proj] = jnp.full(shape, value, jnp.float32)
+    return out
+
+
+def test_registry_slot0_and_allocation():
+    reg = AdapterRegistry(SHAPES, n_slots=4)
+    assert BASE_TENANT in reg and reg.lookup(BASE_TENANT) == 0
+    s1 = reg.register("a", _lam_tree(1.0))
+    s2 = reg.register("b", _lam_tree(2.0))
+    assert {s1, s2}.isdisjoint({0}) and s1 != s2
+    # table rows hold the right λ; unused slots stay zero (base-safe)
+    tab = np.asarray(reg.tables[("attn", "wq")])
+    assert np.all(tab[0] == 0.0) and np.all(tab[s1] == 1.0) and np.all(tab[s2] == 2.0)
+    free = ({1, 2, 3} - {s1, s2}).pop()
+    assert np.all(tab[free] == 0.0)
+
+
+def test_registry_lru_eviction_and_pinning():
+    reg = AdapterRegistry(SHAPES, n_slots=3)  # slots 1,2 usable
+    sa = reg.register("a", _lam_tree(1.0))
+    sb = reg.register("b", _lam_tree(2.0))
+    reg.lookup("a")  # touch: b is now LRU
+    sc = reg.register("c", _lam_tree(3.0))
+    assert "b" not in reg and sc == sb  # b evicted, its slot reused
+    assert np.all(np.asarray(reg.tables[("attn", "wq")])[sc] == 3.0)
+    # pinned tenants survive eviction pressure
+    reg.pin("a")
+    sd = reg.register("d", _lam_tree(4.0))  # evicts c (only unpinned)
+    assert "c" not in reg and "a" in reg and sd == sc
+    reg.pin("d")
+    with pytest.raises(RuntimeError):
+        reg.register("e", _lam_tree(5.0))  # everything pinned
+    reg.unpin("a")
+    assert reg.register("e", _lam_tree(5.0)) == sa
+
+
+def test_registry_hot_swap_and_install():
+    reg = AdapterRegistry(SHAPES, n_slots=3)
+    s = reg.register("a", _lam_tree(1.0))
+    v0 = reg.version
+    assert reg.register("a", _lam_tree(9.0)) == s  # hot-swap, same slot
+    assert reg.version > v0
+    assert np.all(np.asarray(reg.tables[("attn", "wq")])[s] == 9.0)
+    # install produces (lead, n_slots, cap) λ leaves sharing B/A with input
+    B = jnp.ones((3, 4, 8))
+    params = {"groups": {"adapters": {
+        "attn": {"wq": {"B": B, "A": B, "lam": jnp.zeros((3, 8)), "ranks": jnp.ones((3,), jnp.int32)}},
+        "mlp": {"w_up": {"B": B, "A": B, "lam": jnp.zeros((3, 8)), "ranks": jnp.ones((3,), jnp.int32)}},
+    }}}
+    view = reg.install(params)
+    leaf = view["groups"]["adapters"]["attn"]["wq"]
+    assert leaf["lam"].shape == (3, 3, 8)  # (n_stack, n_slots, cap)
+    assert leaf["B"] is B  # factors shared, not copied
+    np.testing.assert_array_equal(np.asarray(leaf["lam"][:, s]), 9.0)
+
+
+def test_registry_hot_swap_pinned_raises():
+    reg = AdapterRegistry(SHAPES, n_slots=3)
+    s = reg.register("a", _lam_tree(1.0))
+    reg.pin("a")
+    with pytest.raises(RuntimeError):  # would mix adapters mid-generation
+        reg.register("a", _lam_tree(2.0))
+    assert np.all(np.asarray(reg.tables[("attn", "wq")])[s] == 1.0)
+    reg.unpin("a")
+    assert reg.register("a", _lam_tree(2.0)) == s
+
+
+def test_registry_base_slot_immutable():
+    reg = AdapterRegistry(SHAPES, n_slots=2)
+    with pytest.raises(ValueError):
+        reg.register(BASE_TENANT, _lam_tree(1.0))
+    with pytest.raises(ValueError):
+        reg.evict(BASE_TENANT)
+
+
+def test_registry_explicit_evict_scrubs_slot():
+    reg = AdapterRegistry(SHAPES, n_slots=3)
+    s = reg.register("a", _lam_tree(7.0))
+    reg.evict("a")
+    assert "a" not in reg
+    assert np.all(np.asarray(reg.tables[("attn", "wq")])[s] == 0.0)
+    assert reg.register("b", _lam_tree(1.0)) == s  # slot back on free list
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admission_and_composition():
+    sch = ContinuousBatchScheduler(n_lanes=2)
+    r0 = sch.submit("a", np.arange(4), 3)
+    r1 = sch.submit("b", np.arange(5), 2)
+    r2 = sch.submit("c", np.arange(6), 1)
+    admitted = sch.admit()
+    assert [r.uid for r in admitted] == [r0.uid, r1.uid]  # FIFO
+    assert {r.lane for r in admitted} == {0, 1}
+    assert sch.admit() == []  # lanes full; r2 waits
+    r0.slot, r1.slot = 3, 1
+    np.testing.assert_array_equal(sch.batch_composition(), [3, 1])
+    # finishing a lane admits the next queued request into that lane
+    r0.tokens.extend([0, 0, 0])
+    sch.finish(r0)
+    assert sch.batch_composition()[0] == 0  # idle lane → base slot
+    nxt = sch.admit()
+    assert [r.uid for r in nxt] == [r2.uid] and nxt[0].lane == 0
+    assert sch.has_work
+    sch.finish(r1)
+    sch.finish(r2)
+    assert not sch.has_work
+
+
+# ---------------------------------------------------------------------------
+# qrlora_bgmv kernel (interpret mode) vs XLA take reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,K,N,r,n_slots", [(64, 128, 96, 16, 4), (33, 48, 80, 8, 5), (8, 256, 128, 4, 2)]
+)
+def test_qrlora_bgmv_matches_ref(M, K, N, r, n_slots, dtype):
+    x = (jax.random.normal(KS[0], (M, K)) * 0.3).astype(dtype)
+    W = (jax.random.normal(KS[1], (K, N)) * 0.1).astype(dtype)
+    B = (jax.random.normal(KS[2], (K, r)) * 0.1).astype(dtype)
+    A = (jax.random.normal(KS[3], (r, N)) * 0.1).astype(dtype)
+    tab = jax.random.normal(KS[4], (n_slots, r), jnp.float32).at[0].set(0.0)
+    seg = jax.random.randint(KS[5], (M,), 0, n_slots)
+    y = ops.qrlora_bgmv(x, W, B, A, tab, seg, 0.7)
+    yr = ref.qrlora_bgmv_ref(x, W, B, A, tab, seg, 0.7)
+    tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol)
+    # slot-0 (base-model) rows are exactly the plain matmul
+    base_rows = np.asarray(seg) == 0
+    if base_rows.any():
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32)[base_rows],
+            np.asarray(x @ W, np.float32)[base_rows],
+            **tol,
+        )
+
+
+def test_qrlora_bgmv_per_sequence_ids():
+    Bb, S, K, N, r = 4, 6, 48, 32, 8
+    x = jax.random.normal(KS[0], (Bb, S, K)) * 0.3
+    W = jax.random.normal(KS[1], (K, N)) * 0.1
+    B = jax.random.normal(KS[2], (K, r)) * 0.1
+    A = jax.random.normal(KS[3], (r, N)) * 0.1
+    tab = jax.random.normal(KS[4], (3, r), jnp.float32).at[0].set(0.0)
+    seq = jnp.asarray([0, 2, 1, 2])
+    y = ops.qrlora_bgmv(x, W, B, A, tab, seq)
+    yr = ref.qrlora_bgmv_ref(
+        x.reshape(-1, K), W, B, A, tab, jnp.repeat(seq, S)
+    ).reshape(Bb, S, N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: mixed batch vs merged-weight per-tenant decodes
+# ---------------------------------------------------------------------------
+
+
+def test_engine_mixed_batch_matches_merged_reference():
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=4, max_len=40, collect_logits=True)
+    rng = np.random.default_rng(3)
+    lams = {BASE_TENANT: base_lambda(eng.params)}
+    for i in (1, 2):
+        t = f"t{i}"
+        lams[t] = random_lambda(jax.random.PRNGKey(i), eng.params, scale=0.3)
+        eng.add_tenant(t, lams[t])
+
+    # 4 requests over 2 lanes: lanes are reused mid-stream (continuous
+    # batching) with heterogeneous prompt and generation lengths
+    specs = [(BASE_TENANT, 6, 4), ("t1", 9, 5), ("t2", 7, 3), ("t1", 5, 4)]
+    reqs = {}
+    for t, P, G in specs:
+        prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+        r = eng.submit(t, prompt, G)
+        reqs[r.uid] = (t, prompt, G)
+
+    done = eng.run()
+    assert len(done) == len(specs)
+    for uid, req in done.items():
+        t, prompt, G = reqs[uid]
+        ref_toks, ref_logits = reference_decode(cfg, eng.params, lams[t], prompt, G, 40)
+        assert req.tokens == ref_toks, f"uid={uid} tenant={t}"
+        np.testing.assert_allclose(
+            np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4
+        )
+
+
+def test_engine_queued_tenant_survives_registration_pressure():
+    """submit() pins its tenant, so registering new tenants while the
+    request is still queued must evict someone else (or refuse)."""
+    cfg = get_reduced("smollm-135m")
+    eng = MultiTenantEngine(cfg, n_lanes=1, n_slots=3, max_len=24)  # 2 usable
+    eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.1))
+    eng.submit("t1", np.arange(2, 6), 2)  # queued, pins t1
+    eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.1))
+    eng.add_tenant("t3", random_lambda(jax.random.PRNGKey(3), eng.params, 0.1))
+    assert "t1" in eng.registry and "t2" not in eng.registry  # t2 was LRU
+    done = eng.run()
+    assert len(done) == 1 and len(next(iter(done.values())).tokens) == 2
+
+
+def test_engine_rejects_unknown_tenant_and_overflow():
+    cfg = get_reduced("smollm-135m")
+    eng = MultiTenantEngine(cfg, n_lanes=1, n_slots=2, max_len=16)
+    with pytest.raises(KeyError):
+        eng.submit("ghost", np.arange(4), 4)
+    with pytest.raises(ValueError):
+        eng.submit(BASE_TENANT, np.arange(10), 10)  # 20 > max_len

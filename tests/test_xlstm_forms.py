@@ -3,7 +3,7 @@ function — property-tested over random gates/inputs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.xlstm import _mlstm_parallel, _mlstm_recurrent_step
 
