@@ -1,5 +1,7 @@
-"""Shared benchmark config: scale knob + CSV emit helper.
+"""Shared benchmark config: scale knob + CSV/JSON emit helpers.
 
+REPRO_BENCH_SCALE=smoke  seconds in CI — smallest shapes that still touch
+                         every code path; the perf-trajectory gate.
 REPRO_BENCH_SCALE=tiny   (default) minutes on a laptop CPU — reduced
                          encoder, short schedules; demonstrates orderings.
 REPRO_BENCH_SCALE=paper  full RoBERTa-base shapes + min(10000,|train|)
@@ -7,6 +9,7 @@ REPRO_BENCH_SCALE=paper  full RoBERTa-base shapes + min(10000,|train|)
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -15,17 +18,30 @@ SCALE = os.environ.get("REPRO_BENCH_SCALE", "tiny")
 if SCALE == "paper":
     KW = dict(reduced=False, train_steps=1500, warmup_steps=600, eval_batches=30,
               batch=16, seq=128)
+elif SCALE == "smoke":
+    KW = dict(reduced=True, train_steps=10, warmup_steps=5, eval_batches=2,
+              batch=8, seq=32)
 else:
     KW = dict(reduced=True, train_steps=50, warmup_steps=30, eval_batches=6,
               batch=16, seq=32)
 
 _rows = []
+_timings = {}
 
 
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     _rows.append(row)
+    _timings[name] = round(float(us_per_call), 1)
     print(row, flush=True)
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted benchmark as {name: us_per_call} — the smoke-bench
+    perf-trajectory file (BENCH_smoke.json) CI uploads per run."""
+    with open(path, "w") as f:
+        json.dump({"scale": SCALE, "us_per_call": _timings}, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def timed(fn, *args, n: int = 3):

@@ -26,6 +26,11 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument(
+        "--json-out", default=None,
+        help="write {name: us_per_call} JSON (e.g. BENCH_smoke.json) on top "
+        "of the CSV rows; written even when a benchmark fails",
+    )
     args = ap.parse_args()
     sel = set(args.only.split(",")) if args.only else None
 
@@ -41,6 +46,11 @@ def main() -> None:
         except Exception:
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}", flush=True)
+    if args.json_out:
+        from benchmarks import common
+
+        common.write_json(args.json_out)
+        print(f"# wrote {args.json_out}")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -9,7 +9,6 @@ Default is a reduced config so it finishes on a laptop CPU; pass
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Benchmark smoke gate: run the cheap benchmark modules at smoke scale and
+# write BENCH_smoke.json ({name: us_per_call}) — the perf-trajectory file CI
+# archives per run.  benchmarks/run.py exits non-zero if any benchmark
+# raises, so a broken hot path fails the job, not just a slow one.
+#
+# Usage: scripts/bench_smoke.sh [--only a,b] [--json-out FILE]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_BENCH_SCALE="${REPRO_BENCH_SCALE:-smoke}"
+
+only="kernel,serve_multitenant"
+json_out="BENCH_smoke.json"
+extra=()
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --only) only="$2"; shift 2 ;;
+    --json-out) json_out="$2"; shift 2 ;;
+    *) extra+=("$1"); shift ;;
+  esac
+done
+
+exec python -m benchmarks.run --only "$only" --json-out "$json_out" "${extra[@]+"${extra[@]}"}"

@@ -1,7 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point — the exact command ROADMAP.md names as the gate.
-# Usage: scripts/ci.sh [extra pytest args...]
+#
+# Usage:
+#   scripts/ci.sh [extra pytest args...]   run the tier-1 suite
+#   scripts/ci.sh --smoke-bench            run the benchmark smoke gate
+#                                          (scripts/bench_smoke.sh → BENCH_smoke.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--smoke-bench" ]]; then
+  shift
+  exec scripts/bench_smoke.sh "$@"
+fi
+
 exec python -m pytest -x -q "$@"

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Adapter (PEFT) configuration — the paper's contribution lives here.

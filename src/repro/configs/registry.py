@@ -6,7 +6,7 @@ Each module defines ``config()`` with the exact published dimensions and
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.configs.base import ModelConfig
 

@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref as ref_ops
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.paged_attention import paged_decode_attention_kernel
 from repro.kernels.qrlora_bgmv import qrlora_bgmv_kernel
 from repro.kernels.qrlora_matmul import qrlora_matmul_kernel
 
@@ -152,4 +152,16 @@ def decode_attention(q, k_cache, v_cache, length, *, bk: int = 512):
     S = k_cache.shape[1]
     bk = int(np.gcd(S, bk))
     o = decode_attention_kernel(q, k_cache, v_cache, length, bk=bk, interpret=interpret)
+    return o[:, None] if squeeze else o
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths):
+    """q (B,1,H,dh) or (B,H,dh); pools (n_blocks, bs, KV, dh); block_tbl
+    (B, max_blocks) int32; lengths (B,) int32 → same rank as q."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    o = paged_decode_attention_kernel(
+        q, k_pool, v_pool, block_tbl, lengths, interpret=not _on_tpu()
+    )
     return o[:, None] if squeeze else o

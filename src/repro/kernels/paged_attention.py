@@ -1,0 +1,122 @@
+"""Paged decode-attention Pallas kernel: one query position vs a block-table
+KV cache.
+
+The dense decode kernel streams a per-lane ``(max_len, KV, dh)`` cache
+region; here K/V live in one global block pool shared by all lanes
+
+    k/v pool : (n_blocks, bs, KV, dh)
+
+and each lane owns ``ceil(len/bs)`` pool blocks named by its block table.
+The table and the per-lane lengths ride as *scalar-prefetch* operands
+(:class:`pltpu.PrefetchScalarGridSpec`), so the BlockSpec index map can
+steer the pool DMA through the table: grid cell ``(b, i)`` pulls pool block
+``tbl[b, i]`` into VMEM — logical block ``i`` of lane ``b`` — and folds it
+into the online softmax.  Blocks past the lane's length are skipped
+(``pl.when``), so short lanes cost HBM reads proportional to their actual
+length, not ``max_len``.
+
+All H query heads of a lane are processed per grid cell so each KV block is
+read once for the whole GQA group (H/KV heads share it), same as the dense
+decode kernel.
+
+grid = (B, max_blocks);  VMEM ≈ H·dh (q) + 2·bs·KV·dh (kv) + H·bs (scores).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.qrlora_matmul import CompilerParams
+
+_NEG = -1e30
+
+
+def _kernel(
+    tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, bs, n_i, rep,
+):
+    b, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(i * bs < length)
+    def _block():
+        q = q_ref[0]  # (H, dh)
+        k = k_ref[0]  # (bs, KV, dh)
+        v = v_ref[0]
+        H, dh = q.shape
+        KV = k.shape[1]
+        # GQA: expand kv → per-query-head scores without repeating in HBM
+        qg = q.reshape(KV, rep, dh)
+        s = jnp.einsum("gri,kgi->grk", qg.astype(jnp.float32), k.astype(jnp.float32))
+        s = (s * scale).reshape(H, bs)
+        kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (H, bs), 1)
+        s = jnp.where(kpos < length, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (H, bs)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jnp.einsum(
+            "grk,kgi->gri",
+            p.reshape(KV, rep, bs),
+            v.astype(jnp.float32),
+        ).reshape(H, dh)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(i == n_i - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_kernel(
+    q: jax.Array,  # (B, H, dh)
+    k_pool: jax.Array,  # (n_blocks, bs, KV, dh)
+    v_pool: jax.Array,
+    block_tbl: jax.Array,  # (B, max_blocks) int32 pool indices
+    lengths: jax.Array,  # (B,) int32 — valid positions per lane
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dh = q.shape
+    n_blocks, bs, KV, _ = k_pool.shape
+    max_blocks = block_tbl.shape[1]
+    rep = H // KV
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tbl, lengths
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, i, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, dh), lambda b, i, tbl, lens: (tbl[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, dh), lambda b, i, tbl, lens: (tbl[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, i, tbl, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=dh**-0.5, bs=bs, n_i=max_blocks, rep=rep
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(block_tbl.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -47,6 +47,32 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths):
+    """Paged decode attention via a plain XLA block-table gather.
+
+    q (B,H,dh); pools (n_blocks, bs, KV, dh); block_tbl (B, max_blocks)
+    int32 pool indices (entry 0 = the trash block, masked by ``lengths``);
+    lengths (B,) int32 valid positions per lane. → (B,H,dh).
+
+    Logical position ``t`` of lane ``b`` lives at
+    ``pool[block_tbl[b, t // bs], t % bs]`` — the gather materializes each
+    lane's (max_blocks·bs, KV, dh) view and runs the dense decode oracle.
+    """
+    B, H, dh = q.shape
+    n_blocks, bs, KV, _ = k_pool.shape
+    max_blocks = block_tbl.shape[1]
+    k = k_pool[block_tbl].reshape(B, max_blocks * bs, KV, dh)
+    v = v_pool[block_tbl].reshape(B, max_blocks * bs, KV, dh)
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k, preferred_element_type=jnp.float32) * (dh**-0.5)
+    mask = (jnp.arange(max_blocks * bs)[None, :] < lengths[:, None])[:, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(v.dtype), v).astype(q.dtype)
+
+
 def decode_attention_ref(q, k_cache, v_cache, length):
     """q (B,H,dh); caches (B,S,KV,dh); length: valid prefix. → (B,H,dh)."""
     B, H, dh = q.shape

@@ -22,11 +22,9 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, all_archs, get_config, shape_applicable
 from repro.launch import specs as S

@@ -41,6 +41,16 @@ def main(argv=None):
     ap.add_argument("--lam-scale", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
+        "--paged", action="store_true",
+        help="paged KV cache: block pool + per-lane block tables instead of "
+        "the dense (lanes, max_len) region",
+    )
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument(
+        "--n-blocks", type=int, default=None,
+        help="KV pool size (default: dense-equivalent capacity + trash block)",
+    )
+    ap.add_argument(
         "--dtype", default="float32",
         help="float32 default: the verification compares fused-multi-λ vs "
         "merged-weight logits, which only makes sense at full precision",
@@ -62,7 +72,16 @@ def main(argv=None):
         max_len=args.max_len,
         collect_logits=not args.no_verify,
         seed=args.seed,
+        paged=args.paged,
+        block_size=args.block_size,
+        n_blocks=args.n_blocks,
     )
+    if args.paged:
+        print(
+            f"[serve_multi] paged KV: block_size={args.block_size} "
+            f"pool={engine.allocator.capacity} blocks "
+            f"cache_bytes={engine.kv_cache_bytes()}"
+        )
 
     # tenant 0 = base model (slot 0, λ ≡ 0); the rest get distinct random λ
     lams = {BASE_TENANT: base_lambda(engine.params)}

@@ -6,7 +6,7 @@ Everything here is allocation-free: model/state shapes come from
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

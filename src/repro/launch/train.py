@@ -15,7 +15,6 @@ Usage (CPU example — also exercised by examples/train_lm.py):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 

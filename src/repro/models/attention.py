@@ -185,6 +185,13 @@ def attention(
 
     new_cache = None
     if cache is not None and not is_cross:
+        if "block_tbl" in cache:  # paged KV cache (block pool + table)
+            if S != 1:
+                raise NotImplementedError(
+                    "paged prefill goes through a dense lane cache spliced "
+                    "into blocks by the engine (serving/engine.py)"
+                )
+            return _paged_decode(p, q, k, v, cache, cfg, adp, scale, sdt)
         if S == 1:  # decode
             nm = _decode_shard_names(cfg)
             idx = cache["idx"]
@@ -222,6 +229,54 @@ def attention(
             mask = jnp.ones((1, 1, 1, S, Sk), bool)
         out = _softmax_attend(q, k, v, mask, scale, scores_dtype=sdt)
     o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
+    return shard(o, "batch", None, None), new_cache
+
+
+def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
+    """One decode step against a paged KV cache.
+
+    ``cache``: ``k``/``v`` pools (n_blocks, bs, KV, dh), ``block_tbl``
+    (B, max_blocks) int32, ``idx`` (B,) per-lane lengths.  Lane ``b``'s
+    token ``t`` lives at ``pool[block_tbl[b, t // bs], t % bs]``; idle lanes
+    point at trash block 0 (never allocated) so the shared scatter needs no
+    per-lane branching.
+    """
+    B = q.shape[0]
+    H, dh = cfg.n_heads, cfg.d_head
+    n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
+    tbl, idx = cache["block_tbl"], cache["idx"]
+    max_blocks = tbl.shape[1]
+    nm = _decode_shard_names(cfg)
+    q = shard(q, "batch", None, *nm)
+    k = shard(k, "batch", None, *nm)
+    v = shard(v, "batch", None, *nm)
+
+    # -- write: scatter this step's k/v into each lane's current block ------
+    blk = jnp.take_along_axis(
+        tbl, jnp.clip(idx // bs, 0, max_blocks - 1)[:, None], axis=1
+    )[:, 0]
+    flat = blk * bs + idx % bs  # (B,) — distinct across active lanes
+    kp = cache["k"].reshape(n_blocks * bs, *cache["k"].shape[2:])
+    vp = cache["v"].reshape(n_blocks * bs, *cache["v"].shape[2:])
+    kp = kp.at[flat].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[flat].set(v[:, 0].astype(vp.dtype))
+    kp = shard(kp.reshape(cache["k"].shape), None, None, *nm)
+    vp = shard(vp.reshape(cache["v"].shape), None, None, *nm)
+    new_cache = {"k": kp, "v": vp, "block_tbl": tbl, "idx": idx + 1}
+
+    # -- attend through the block table -------------------------------------
+    lengths = idx + 1  # current position is valid
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        out = kernel_ops.paged_decode_attention(q, kp, vp, tbl, lengths)
+    else:
+        kg = kp[tbl].reshape(B, max_blocks * bs, *kp.shape[2:]).astype(q.dtype)
+        vg = vp[tbl].reshape(B, max_blocks * bs, *vp.shape[2:]).astype(q.dtype)
+        kpos = jnp.arange(max_blocks * bs)
+        mask = (kpos[None, :] < lengths[:, None])[:, None, None, None, :]
+        out = _softmax_attend(q, kg, vg, mask, scale, decode=True, scores_dtype=sdt)
+    o = adapted_matmul(out.reshape(B, 1, H * dh), p["wo"], (adp or {}).get("wo"))
     return shard(o, "batch", None, None), new_cache
 
 

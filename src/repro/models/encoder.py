@@ -7,7 +7,7 @@ the attention projections exactly as in §4.1 of the paper.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

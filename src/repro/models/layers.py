@@ -1,7 +1,6 @@
 """Shared building blocks: norms, rotary embeddings, initializers."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

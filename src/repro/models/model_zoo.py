@@ -141,14 +141,18 @@ class Model:
         )
 
     def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                          per_lane: bool = False):
-        return tfm_lib.init_decode_state(self.cfg, batch, max_len, dtype, per_lane=per_lane)
+                          per_lane: bool = False, paged: bool = False,
+                          block_size: int = 16, n_blocks: Optional[int] = None):
+        return tfm_lib.init_decode_state(
+            self.cfg, batch, max_len, dtype, per_lane=per_lane, paged=paged,
+            block_size=block_size, n_blocks=n_blocks,
+        )
 
     def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None,
-                seg_ids=None):
+                seg_ids=None, length=None):
         return tfm_lib.decoder_prefill(
             params, self.cfg, cache, tokens=tokens, embeds=embeds,
-            image_embeds=image_embeds, seg_ids=seg_ids,
+            image_embeds=image_embeds, seg_ids=seg_ids, length=length,
         )
 
     def decode_step(self, params, cache, token=None, embeds=None, image_embeds=None,

@@ -29,7 +29,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import stacked_dense_init
 from repro.sharding.rules import get_mesh, _rules, shard_map
 
 

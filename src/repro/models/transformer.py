@@ -16,8 +16,7 @@ so the PEFT factors ride through the same scan.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -383,12 +382,20 @@ def decoder_apply(
 
 
 def init_decode_state(
-    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, per_lane: bool = False
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, per_lane: bool = False,
+    paged: bool = False, block_size: int = 16, n_blocks: Optional[int] = None,
 ):
     """Decode cache.  ``per_lane=True`` gives every batch lane its own write
     offset (``idx (…, batch)``) and position (``pos (batch,)``) so lanes can
     hold sequences of different lengths — the continuous-batching layout
-    used by ``repro.serving``.  Default keeps the scalar lock-step layout."""
+    used by ``repro.serving``.  Default keeps the scalar lock-step layout.
+
+    ``paged=True`` (implies per-lane) swaps the dense ``(batch, max_len)``
+    KV region for a global block pool ``(n_blocks, block_size, KV, dh)``
+    per layer plus per-lane block tables ``(batch, max_len/block_size)``
+    int32 — block 0 is the reserved trash block (see serving/paging.py).
+    HBM then scales with actual resident tokens, not ``batch × max_len``.
+    """
     G = cfg.n_layers // cfg.group_size
     fam = cfg.family
     if per_lane and fam in ("hybrid", "ssm"):
@@ -396,10 +403,35 @@ def init_decode_state(
             "per-lane decode state is attention-cache only (recurrent-state "
             "lane management is a ROADMAP open item)"
         )
+    if paged:
+        if fam not in ("dense", "audio", "moe"):
+            raise NotImplementedError(
+                "paged KV cache covers the plain-attention families "
+                "(dense/audio/moe)"
+            )
+        if max_len % block_size:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of block_size={block_size}"
+            )
+        per_lane = True
     cache: Dict[str, Pytree] = {
         "pos": jnp.zeros((batch,) if per_lane else (), jnp.int32)
     }
     KV, dh = cfg.n_kv_heads, cfg.d_head
+
+    if paged:
+        max_blocks = max_len // block_size
+        if n_blocks is None:
+            n_blocks = 1 + batch * max_blocks  # worst case + trash block
+        cache["layers"] = {
+            "attn": {
+                "k": jnp.zeros((G, n_blocks, block_size, KV, dh), dtype),
+                "v": jnp.zeros((G, n_blocks, block_size, KV, dh), dtype),
+                "block_tbl": jnp.zeros((G, batch, max_blocks), jnp.int32),
+                "idx": jnp.zeros((G, batch), jnp.int32),
+            }
+        }
+        return cache
 
     def kv(n_lead):
         idx_shape = (*n_lead, batch) if per_lane else n_lead
@@ -432,9 +464,18 @@ def init_decode_state(
 
 def decoder_prefill(
     params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None,
-    seg_ids=None,
+    seg_ids=None, length=None,
 ):
-    """Fill the cache with a prompt; returns (last-position logits, cache)."""
+    """Fill the cache with a prompt; returns (last-position logits, cache).
+
+    ``length`` (int32 (B,)) marks the true prompt length when ``tokens`` is
+    right-padded to a bucket size (prompt-length bucketing: distinct padded
+    lengths — not distinct prompt lengths — trigger prefill compiles).
+    Logits are taken at position ``length-1`` per row and the cache
+    position/offsets are set to ``length``, so the padded tail is dead
+    weight that decode overwrites and masks.  Causality keeps the valid
+    prefix's K/V independent of the padding.
+    """
     x = _embed_input(params, cfg, tokens, embeds)
     S = x.shape[1]
     positions = jnp.arange(S)
@@ -445,12 +486,21 @@ def decoder_prefill(
         params, cfg, x, positions, cache["layers"], img, decode=False, train=False,
         seg_ids=seg_ids,
     )
-    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if length is None:
+        x_last = x[:, -1:]
+        new_pos = jnp.full_like(cache["pos"], S)
+    else:
+        length = jnp.asarray(length, jnp.int32)
+        x_last = jnp.take_along_axis(x, (length - 1)[:, None, None], axis=1)
+        new_pos = jnp.broadcast_to(length, cache["pos"].shape)
+        if "attn" in new_layers:
+            att = dict(new_layers["attn"])
+            att["idx"] = jnp.broadcast_to(length, att["idx"].shape)
+            new_layers = {**new_layers, "attn": att}
+    x = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(
         "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
     )
-    # per-lane caches carry pos (B,); lock-step carries a scalar
-    new_pos = jnp.full_like(cache["pos"], S)
     return logits[:, 0], {"pos": new_pos, "layers": new_layers}
 
 

@@ -15,7 +15,6 @@ is validated by unit tests + the dry-run collective-bytes delta.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

@@ -40,9 +40,12 @@ Pieces
   λ into packed device tables, LRU eviction, slot-0 base tenant.
 * :mod:`repro.serving.scheduler` — continuous batching: FIFO request queue
   over fixed decode lanes, prefill/decode interleaving, per-lane slot ids.
+* :mod:`repro.serving.paging`    — block allocator for the paged KV cache:
+  a global per-layer block pool + per-lane block tables replaces the dense
+  ``(lanes, max_len)`` region, so cache HBM tracks resident tokens.
 * :mod:`repro.serving.engine`    — the decode loop: slot-indexed per-lane
-  KV cache, admission splicing, greedy generation, plus the merged-weight
-  per-tenant reference oracle.
+  (or paged) KV cache, admission splicing, bucketed prefill, greedy
+  generation, plus the merged-weight per-tenant reference oracle.
 
 Drivers: ``launch/serve_multi.py`` (mixed-tenant batch with per-tenant
 verification against merged weights), ``benchmarks/serve_multitenant.py``
@@ -54,14 +57,17 @@ from repro.serving.engine import (
     merge_tenant_params,
     reference_decode,
 )
+from repro.serving.paging import BlockAllocator, PoolExhausted
 from repro.serving.registry import BASE_TENANT, AdapterRegistry, extract_lambda, random_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 __all__ = [
     "AdapterRegistry",
     "BASE_TENANT",
+    "BlockAllocator",
     "ContinuousBatchScheduler",
     "MultiTenantEngine",
+    "PoolExhausted",
     "Request",
     "base_lambda",
     "extract_lambda",

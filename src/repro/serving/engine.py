@@ -14,6 +14,17 @@ Glues the pieces together:
   lane has its own write offset and position), admission prefills a single
   request into a lane-1 cache and splices it into the shared cache, so
   lanes hold sequences of different tenants, lengths, and ages.
+* ``paged=True`` swaps the dense ``(lanes, max_len)`` KV region for a
+  global block pool + per-lane block tables (``serving/paging.py``):
+  admission allocates ``ceil((prompt+gen)/block_size)`` blocks and splices
+  the prefilled K/V into them; retirement frees them, so HBM tracks actual
+  resident tokens instead of ``lanes × max_len`` worst case.  When the
+  pool cannot hold the next request, admission defers it (strict FIFO)
+  until a retirement frees enough blocks.
+
+Admission prefill pads prompts to power-of-two buckets (true length rides
+along and masks the tail), so 10 mixed-length prompts cost ≤ log2(max_len)
+prefill compilations instead of one per distinct length.
 
 The engine is greedy-decode and host-driven: ``step()`` = admit + one
 decode step; ``run()`` loops until queue and lanes drain.
@@ -29,12 +40,24 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
 from repro.models import build_model
+from repro.serving.paging import BlockAllocator
 from repro.serving.registry import AdapterRegistry, extract_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 Pytree = Any
 
 _LANE_FAMILIES = ("dense", "audio", "moe")
+
+_MIN_PREFILL_BUCKET = 8
+
+
+def _bucket_len(n: int, max_len: int) -> int:
+    """Smallest power-of-two ≥ n (floor _MIN_PREFILL_BUCKET), clamped to
+    max_len — the padded prompt length admission prefill compiles for."""
+    b = _MIN_PREFILL_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, max_len)
 
 
 class MultiTenantEngine:
@@ -48,6 +71,9 @@ class MultiTenantEngine:
         max_len: int = 128,
         collect_logits: bool = False,
         seed: int = 0,
+        paged: bool = False,
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
     ):
         if cfg.family not in _LANE_FAMILIES:
             raise NotImplementedError(
@@ -66,18 +92,36 @@ class MultiTenantEngine:
         self.n_lanes, self.max_len = n_lanes, max_len
         self.collect_logits = collect_logits
         self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-        self.cache = self.model.init_decode_state(
-            n_lanes, max_len, self.dtype, per_lane=True
-        )
+        self.paged = paged
+        if paged:
+            if max_len % block_size:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of block_size={block_size}"
+                )
+            self.block_size = block_size
+            self.max_blocks = max_len // block_size
+            if n_blocks is None:
+                n_blocks = 1 + n_lanes * self.max_blocks  # dense-equivalent
+            self.allocator = BlockAllocator(n_blocks, block_size)
+            self._lane_blocks: Dict[int, List[int]] = {}
+            self.cache = self.model.init_decode_state(
+                n_lanes, max_len, self.dtype, paged=True,
+                block_size=block_size, n_blocks=n_blocks,
+            )
+        else:
+            self.cache = self.model.init_decode_state(
+                n_lanes, max_len, self.dtype, per_lane=True
+            )
         self._view_version = -1
         self._view: Optional[Pytree] = None
         self.steps = 0
         self.decoded_tokens = 0
+        self.prefill_buckets: set = set()  # padded lengths actually compiled
 
         model = self.model
 
-        def _prefill(view, cache, tokens, seg):
-            return model.prefill(view, cache, tokens=tokens, seg_ids=seg)
+        def _prefill(view, cache, tokens, seg, length):
+            return model.prefill(view, cache, tokens=tokens, seg_ids=seg, length=length)
 
         def _decode(view, cache, tok, seg):
             return model.decode_step(view, cache, token=tok, seg_ids=seg)
@@ -95,9 +139,57 @@ class MultiTenantEngine:
             )
             return {"pos": pos, "layers": layers}
 
+        def _splice_paged(big, small, lane, block_ids, length):
+            """Scatter a dense 1-lane prefill cache into the lane's freshly
+            allocated pool blocks and point its table row at them.  Entries
+            of ``block_ids`` past the allocation name trash block 0 — their
+            (padding) blocks land there and are never read."""
+            pos = jax.lax.dynamic_update_slice_in_dim(
+                big["pos"], small["pos"], lane, axis=0
+            )
+            bg, sm = big["layers"]["attn"], small["layers"]["attn"]
+            G, n_blocks, bs = bg["k"].shape[:3]
+            mb = bg["block_tbl"].shape[2]
+            kb = sm["k"][:, 0].reshape(G, mb, bs, *sm["k"].shape[3:])
+            vb = sm["v"][:, 0].reshape(G, mb, bs, *sm["v"].shape[3:])
+            k = bg["k"].at[:, block_ids].set(kb.astype(bg["k"].dtype))
+            v = bg["v"].at[:, block_ids].set(vb.astype(bg["v"].dtype))
+            tbl = jax.lax.dynamic_update_slice(
+                bg["block_tbl"],
+                jnp.broadcast_to(block_ids.astype(jnp.int32), (G, 1, mb)),
+                (0, lane, 0),
+            )
+            idx = jax.lax.dynamic_update_slice(
+                bg["idx"],
+                jnp.broadcast_to(length.astype(jnp.int32), (G, 1)),
+                (0, lane),
+            )
+            attn = {"k": k, "v": v, "block_tbl": tbl, "idx": idx}
+            return {"pos": pos, "layers": {"attn": attn}}
+
+        def _release(cache, lane):
+            """Retire a lane: point its table row at trash block 0 and zero
+            its offsets, so the freed blocks can be reallocated without the
+            (still-decoding) idle lane scribbling into them."""
+            pos = jax.lax.dynamic_update_slice(
+                cache["pos"], jnp.zeros((1,), jnp.int32), (lane,)
+            )
+            a = cache["layers"]["attn"]
+            G, _, mb = a["block_tbl"].shape
+            tbl = jax.lax.dynamic_update_slice(
+                a["block_tbl"], jnp.zeros((G, 1, mb), jnp.int32), (0, lane, 0)
+            )
+            idx = jax.lax.dynamic_update_slice(
+                a["idx"], jnp.zeros((G, 1), jnp.int32), (0, lane)
+            )
+            attn = {"k": a["k"], "v": a["v"], "block_tbl": tbl, "idx": idx}
+            return {"pos": pos, "layers": {"attn": attn}}
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._splice = jax.jit(_splice)
+        self._splice_paged = jax.jit(_splice_paged)
+        self._release = jax.jit(_release)
 
     # -- tenants ------------------------------------------------------------
 
@@ -122,6 +214,13 @@ class MultiTenantEngine:
                 f"prompt({prompt.size}) + gen({max_new_tokens}) exceeds "
                 f"max_len={self.max_len}"
             )
+        if self.paged:
+            need = self.allocator.blocks_for(prompt.size + max_new_tokens)
+            if need > self.allocator.capacity:
+                raise ValueError(
+                    f"request needs {need} blocks but the pool only has "
+                    f"{self.allocator.capacity} — it could never be admitted"
+                )
         # pin from submission (not admission): a queued request must keep its
         # tenant's slot resident until it finishes
         self.registry.pin(tenant)
@@ -129,18 +228,56 @@ class MultiTenantEngine:
 
     # -- the serving loop ---------------------------------------------------
 
+    def _blocks_needed(self, req: Request) -> int:
+        return self.allocator.blocks_for(req.prompt.size + req.max_new_tokens)
+
+    def _admission_gate(self):
+        """Pool gate for ``scheduler.admit``: approving a request *reserves*
+        its blocks for this admission round, so one round can't hand the
+        same free blocks to two requests (allocation happens per-request
+        later in ``_admit``)."""
+        reserved = [0]
+
+        def gate(req: Request) -> bool:
+            need = self._blocks_needed(req)
+            if self.allocator.n_free - reserved[0] >= need:
+                reserved[0] += need
+                return True
+            return False
+
+        return gate
+
     def _admit(self, finished: List[Request]) -> None:
         view = self._params_view()
-        for req in self.scheduler.admit():
+        gate = self._admission_gate() if self.paged else None
+        for req in self.scheduler.admit(gate):
             req.slot = self.registry.lookup(req.tenant)  # pinned since submit
             lane_cache = self.model.init_decode_state(
                 1, self.max_len, self.dtype, per_lane=True
             )
             seg = jnp.full((1,), req.slot, jnp.int32)
+            # prompt-length bucketing: pad to a power of two so distinct
+            # prompt lengths share prefill compilations; true length masks
+            P = req.prompt.size
+            Pb = _bucket_len(P, self.max_len)
+            padded = np.zeros((Pb,), np.int32)
+            padded[:P] = req.prompt
+            self.prefill_buckets.add(Pb)
             logits, lane_cache = self._prefill(
-                view, lane_cache, jnp.asarray(req.prompt)[None, :], seg
+                view, lane_cache, jnp.asarray(padded)[None, :], seg,
+                jnp.full((1,), P, jnp.int32),
             )
-            self.cache = self._splice(self.cache, lane_cache, req.lane)
+            if self.paged:
+                ids = self.allocator.alloc(self._blocks_needed(req))
+                self._lane_blocks[req.lane] = ids
+                padded_ids = np.zeros((self.max_blocks,), np.int32)
+                padded_ids[: len(ids)] = ids  # tail → trash block 0
+                self.cache = self._splice_paged(
+                    self.cache, lane_cache, req.lane, jnp.asarray(padded_ids),
+                    jnp.asarray(P, jnp.int32),
+                )
+            else:
+                self.cache = self._splice(self.cache, lane_cache, req.lane)
             self._emit(req, np.asarray(logits[0]), finished)
 
     def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
@@ -149,8 +286,12 @@ class MultiTenantEngine:
             req.logits.append(logits_row)
         self.decoded_tokens += 1
         if req.done:
+            lane = req.lane
             self.scheduler.finish(req)
             self.registry.unpin(req.tenant)
+            if self.paged:
+                self.allocator.free(self._lane_blocks.pop(lane))
+                self.cache = self._release(self.cache, lane)
             finished.append(req)
 
     def step(self) -> List[Request]:
@@ -180,6 +321,21 @@ class MultiTenantEngine:
             for req in self.step():
                 out[req.uid] = req
         return out
+
+    # -- accounting ---------------------------------------------------------
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the decode KV cache (pools/regions + block
+        tables + offsets) — the paged-vs-dense benchmark datum."""
+        return sum(
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.cache)
+        )
+
+    @property
+    def prefill_compilations(self) -> int:
+        """Distinct padded prompt lengths prefilled so far — with bucketing
+        this is the number of prefill compilations the engine caused."""
+        return len(self.prefill_buckets)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,100 @@
+"""Block allocator for the paged KV cache.
+
+The dense per-lane decode cache sizes every lane for the worst case:
+``(lanes, max_len, KV, dh)`` per layer, regardless of how long each lane's
+sequence actually is.  Paging replaces it with one global pool of fixed-size
+blocks per layer
+
+    k/v pool : (n_blocks, block_size, n_kv_heads, d_head)
+
+plus a per-lane *block table* ``(lanes, max_len/block_size)`` of pool
+indices.  A sequence of ``T`` tokens holds ``ceil(T / block_size)`` blocks —
+HBM tracks actual traffic instead of ``lanes × max_len``.
+
+This module is the host-side bookkeeping: a free-list allocator with the
+same role as vLLM's ``BlockAllocator``.  Device-side state (the pools and
+tables inside the decode cache) is written by the engine's admission splice
+and read by the paged decode-attention kernel.
+
+Conventions
+===========
+
+* **Block 0 is reserved** as the trash block.  Idle lanes and padded table
+  entries point at it, so the shared decode step can scatter their (masked,
+  never-read) writes somewhere harmless instead of branching per lane.
+* Allocation is all-or-nothing per request: admission asks for every block
+  the request can ever touch (``ceil((prompt + max_new_tokens) / bs)``), so
+  a request admitted once can never die of pool exhaustion mid-decode.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockAllocator:
+    """Free-list over ``n_blocks`` KV blocks; block 0 reserved for trash."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError("need block 0 (trash) plus at least one usable block")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # LIFO free list: lowest ids handed out first (stable test behavior)
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._allocated: set = set()
+
+    # -- capacity -----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (excludes the reserved trash block)."""
+        return self.n_blocks - 1
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache positions."""
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    # -- alloc / free -------------------------------------------------------
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` blocks from the free list; raises :class:`PoolExhausted`
+        (allocating nothing) when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative block count")
+        if n > self.n_free:
+            raise PoolExhausted(
+                f"need {n} blocks, {self.n_free}/{self.capacity} free"
+            )
+        ids = [self._free.pop() for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        """Return blocks to the pool.  Double-free and freeing the trash
+        block are bookkeeping bugs and raise."""
+        for b in ids:
+            if b == 0:
+                raise ValueError("block 0 is reserved and never allocated")
+            if b not in self._allocated:
+                raise ValueError(f"double free / foreign block {b}")
+            self._allocated.discard(b)
+            self._free.append(b)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"BlockAllocator(n_blocks={self.n_blocks}, bs={self.block_size}, "
+            f"free={self.n_free}/{self.capacity})"
+        )

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

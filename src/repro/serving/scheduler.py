@@ -66,12 +66,20 @@ class ContinuousBatchScheduler:
     def free_lanes(self) -> List[int]:
         return [i for i, r in enumerate(self.lanes) if r is None]
 
-    def admit(self) -> List[Request]:
+    def admit(self, can_admit=None) -> List[Request]:
         """Move queued requests into free lanes (FIFO); returns the newly
-        admitted requests with their ``lane`` assigned."""
+        admitted requests with their ``lane`` assigned.
+
+        ``can_admit(req) -> bool`` is an optional resource gate (e.g. the
+        paged engine's "does the block pool hold this request?").  Admission
+        stops at the first refused request — strict FIFO, no overtaking —
+        leaving it (and everything behind it) queued for a later step.
+        """
         admitted = []
         for lane in self.free_lanes():
             if not self.queue:
+                break
+            if can_admit is not None and not can_admit(self.queue[0]):
                 break
             req = self.queue.popleft()
             req.lane = lane

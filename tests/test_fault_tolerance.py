@@ -2,7 +2,6 @@
 detection, preemption checkpoint-and-exit."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.runtime import StragglerMonitor, TrainLoopRunner

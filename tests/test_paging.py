@@ -1,0 +1,288 @@
+"""Paged KV cache: block allocator properties, the paged decode-attention
+kernel vs its XLA gather oracle, paged-vs-dense engine equivalence, and
+pool-exhaustion admission behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_reduced
+from repro.kernels import ops, ref
+from repro.serving import (
+    BASE_TENANT,
+    BlockAllocator,
+    MultiTenantEngine,
+    PoolExhausted,
+    base_lambda,
+    random_lambda,
+    reference_decode,
+)
+
+KS = jax.random.split(jax.random.PRNGKey(7), 8)
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_basics_and_trash_block():
+    al = BlockAllocator(n_blocks=5, block_size=8)
+    assert al.capacity == 4 and al.n_free == 4
+    assert al.blocks_for(0) == 0
+    assert al.blocks_for(1) == 1
+    assert al.blocks_for(8) == 1
+    assert al.blocks_for(9) == 2
+    a = al.alloc(2)
+    b = al.alloc(2)
+    assert 0 not in a + b, "block 0 is the reserved trash block"
+    assert len(set(a + b)) == 4 and al.n_free == 0
+    with pytest.raises(PoolExhausted):
+        al.alloc(1)
+    al.free(a)
+    assert al.n_free == 2
+    c = al.alloc(2)
+    assert set(c) == set(a), "freed blocks are reused"
+
+
+def test_allocator_double_free_and_trash_free_raise():
+    al = BlockAllocator(n_blocks=4, block_size=4)
+    ids = al.alloc(1)
+    al.free(ids)
+    with pytest.raises(ValueError):
+        al.free(ids)  # double free
+    with pytest.raises(ValueError):
+        al.free([0])  # trash block is never allocated
+    with pytest.raises(ValueError):
+        al.alloc(-1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_blocks=st.integers(2, 24), seed=st.integers(0, 10_000))
+def test_allocator_random_traffic_conserves_blocks(n_blocks, seed):
+    """Property: any interleaving of allocs/frees never double-hands a
+    block, never exceeds capacity, and drains back to a full free list."""
+    rng = np.random.default_rng(seed)
+    al = BlockAllocator(n_blocks=n_blocks, block_size=8)
+    live = []
+    for _ in range(50):
+        if live and rng.random() < 0.4:
+            al.free(live.pop(rng.integers(len(live))))
+        else:
+            n = int(rng.integers(0, max(al.capacity // 2, 1) + 1))
+            try:
+                ids = al.alloc(n)
+            except PoolExhausted:
+                assert n > al.n_free
+                continue
+            assert len(ids) == n and 0 not in ids
+            live.append(ids)
+        flat = [b for ids in live for b in ids]
+        assert len(flat) == len(set(flat)), "block handed out twice"
+        assert len(flat) + al.n_free == al.capacity, "blocks leaked"
+    for ids in live:
+        al.free(ids)
+    assert al.n_free == al.capacity
+
+
+# ---------------------------------------------------------------------------
+# paged decode-attention kernel vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_kernel_matches_gather_ref(dtype):
+    B, H, KV, dh = 3, 8, 2, 64
+    n_blocks, bs, mb = 11, 16, 4
+    q = (jax.random.normal(KS[0], (B, H, dh)) * 0.5).astype(dtype)
+    kp = (jax.random.normal(KS[1], (n_blocks, bs, KV, dh)) * 0.5).astype(dtype)
+    vp = (jax.random.normal(KS[2], (n_blocks, bs, KV, dh)) * 0.5).astype(dtype)
+    tbl = jax.random.randint(KS[3], (B, mb), 0, n_blocks)
+    lens = jnp.asarray([1, 37, 64], jnp.int32)
+    o = ops.paged_decode_attention(q, kp, vp, tbl, lens)
+    r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32), **tol
+    )
+
+
+def test_paged_ref_matches_dense_ref_on_identity_layout():
+    """With an identity block table the paged oracle must reproduce the
+    dense decode oracle exactly (same positions, same masking)."""
+    B, H, KV, dh = 2, 4, 2, 32
+    bs, mb = 8, 4
+    n_blocks = mb  # blocks 0..mb-1 laid out contiguously
+    kp = jax.random.normal(KS[4], (n_blocks, bs, KV, dh), jnp.float32)
+    vp = jax.random.normal(KS[5], (n_blocks, bs, KV, dh), jnp.float32)
+    q = jax.random.normal(KS[6], (B, H, dh), jnp.float32)
+    tbl = jnp.tile(jnp.arange(mb)[None], (B, 1))
+    dense_k = jnp.tile(kp.reshape(1, mb * bs, KV, dh), (B, 1, 1, 1))
+    dense_v = jnp.tile(vp.reshape(1, mb * bs, KV, dh), (B, 1, 1, 1))
+    for length in (1, 13, mb * bs):
+        o_paged = ref.paged_decode_attention_ref(
+            q, kp, vp, tbl, jnp.full((B,), length, jnp.int32)
+        )
+        o_dense = ref.decode_attention_ref(q, dense_k, dense_v, length)
+        np.testing.assert_allclose(
+            np.asarray(o_paged), np.asarray(o_dense), atol=1e-6, rtol=1e-6
+        )
+
+
+def test_paged_kernel_ignores_trash_and_stale_blocks():
+    """Entries past ``length`` (padding → trash block 0, stale ids) must not
+    leak into the output: poisoning them leaves the result unchanged."""
+    B, H, KV, dh = 1, 4, 1, 32
+    n_blocks, bs, mb = 6, 8, 3
+    q = jax.random.normal(KS[0], (B, H, dh), jnp.float32)
+    kp = jax.random.normal(KS[1], (n_blocks, bs, KV, dh), jnp.float32)
+    vp = jax.random.normal(KS[2], (n_blocks, bs, KV, dh), jnp.float32)
+    tbl = jnp.asarray([[2, 4, 0]], jnp.int32)  # last entry = trash
+    lens = jnp.asarray([11], jnp.int32)  # only blocks 0..1 + 3 positions
+    base = ops.paged_decode_attention(q, kp, vp, tbl, lens)
+    kp_p = kp.at[0].set(1e4).at[4, 5:].set(-1e4)  # poison trash + masked tail
+    vp_p = vp.at[0].set(1e4).at[4, 5:].set(-1e4)
+    poisoned = ops.paged_decode_attention(q, kp_p, vp_p, tbl, lens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs dense end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(cfg, paged, specs, rng_seed=3, **kw):
+    eng = MultiTenantEngine(
+        cfg, n_lanes=2, n_slots=4, max_len=48, collect_logits=True,
+        paged=paged, block_size=8, **kw,
+    )
+    lams = {BASE_TENANT: base_lambda(eng.params)}
+    for i in (1, 2):
+        t = f"t{i}"
+        lams[t] = random_lambda(jax.random.PRNGKey(i), eng.params, scale=0.3)
+        eng.add_tenant(t, lams[t])
+    rng = np.random.default_rng(rng_seed)
+    reqs = {}
+    for t, P, G in specs:
+        prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+        r = eng.submit(t, prompt, G)
+        reqs[r.uid] = (t, prompt, G)
+    done = eng.run()
+    return eng, reqs, lams, done
+
+
+SPECS = [(BASE_TENANT, 6, 4), ("t1", 9, 5), ("t2", 7, 3), ("t1", 13, 4)]
+
+
+def test_engine_paged_matches_dense_tokens_and_logits():
+    """Mixed tenants × mixed prompt lengths × lane reuse: the paged engine
+    must be token- and logit-identical to the dense per-lane engine."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    _, dense_reqs, _, dense_done = _run_engine(cfg, paged=False, specs=SPECS)
+    paged_eng, paged_reqs, _, paged_done = _run_engine(cfg, paged=True, specs=SPECS)
+    assert dense_done.keys() == paged_done.keys() == dense_reqs.keys()
+    for uid in dense_done:
+        rd, rp = dense_done[uid], paged_done[uid]
+        assert rd.tokens == rp.tokens, f"uid={uid}"
+        np.testing.assert_array_equal(np.stack(rd.logits), np.stack(rp.logits))
+    # pool fully drained back to the free list
+    assert paged_eng.allocator.n_free == paged_eng.allocator.capacity
+
+
+def test_engine_paged_matches_merged_weight_reference():
+    """The serve_multi correctness oracle (per-tenant λ merged into the
+    weights, single-lane decode) holds under paged=True."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng, reqs, lams, done = _run_engine(cfg, paged=True, specs=SPECS[:3])
+    for uid, (t, prompt, G) in reqs.items():
+        req = done[uid]
+        ref_toks, ref_logits = reference_decode(
+            cfg, eng.params, lams[t], prompt, G, 48
+        )
+        assert req.tokens == ref_toks, f"uid={uid} tenant={t}"
+        np.testing.assert_allclose(
+            np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4
+        )
+
+
+def test_engine_pool_exhaustion_defers_then_completes():
+    """With a pool that holds one request at a time, admission defers the
+    second request (strict FIFO) until retirement frees blocks."""
+    cfg = get_reduced("smollm-135m")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=2, n_slots=3, max_len=32, paged=True, block_size=8,
+        n_blocks=1 + 2,  # 2 usable blocks
+    )
+    eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 8)  # 2 blocks
+    eng.submit(BASE_TENANT, np.arange(2, 12, dtype=np.int32), 6)  # 2 blocks
+    eng.step()
+    # one lane busy, the other free but starved of blocks
+    busy = [r is not None for r in eng.scheduler.lanes]
+    assert busy.count(True) == 1 and len(eng.scheduler.queue) == 1
+    assert eng.allocator.n_free == 0
+    done = eng.run()
+    assert sorted(len(r.tokens) for r in done.values()) == [6, 8]
+    assert eng.allocator.n_free == eng.allocator.capacity
+
+
+def test_engine_rejects_never_admittable_request():
+    cfg = get_reduced("smollm-135m")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=1, n_slots=2, max_len=32, paged=True, block_size=8,
+        n_blocks=1 + 2,
+    )
+    with pytest.raises(ValueError):  # 24 tokens → 3 blocks > capacity 2
+        eng.submit(BASE_TENANT, np.arange(2, 18, dtype=np.int32), 8)
+
+
+def test_engine_paged_memory_below_dense_for_short_traffic():
+    """The point of paging: pool sized to traffic beats lanes×max_len."""
+    cfg = get_reduced("smollm-135m")
+    dense = MultiTenantEngine(cfg, n_lanes=4, n_slots=2, max_len=256)
+    paged = MultiTenantEngine(
+        cfg, n_lanes=4, n_slots=2, max_len=256, paged=True, block_size=16,
+        n_blocks=1 + 4 * 2,  # 4 lanes × 2 blocks (≤32-token requests)
+    )
+    assert paged.kv_cache_bytes() < dense.kv_cache_bytes()
+
+
+# ---------------------------------------------------------------------------
+# prompt-length bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_bucketing_bounds_compilations():
+    """10 requests at 10 distinct prompt lengths must share ≤4 prefill
+    compilations (power-of-two buckets), not compile one prefill each."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    lengths = [3, 5, 6, 9, 11, 14, 17, 21, 26, 31]  # 10 distinct lengths
+    for P in lengths:
+        eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=P), 2)
+    done = eng.run()
+    assert len(done) == len(lengths)
+    assert eng.prefill_compilations <= 4, eng.prefill_buckets
+    # the jit cache agrees with the host-side bucket accounting
+    cache_size = getattr(eng._prefill, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() <= 4
+
+
+def test_prefill_bucketing_preserves_logits():
+    """Bucketed (padded+masked) prefill returns the same next-token logits
+    as the unpadded merged-weight reference decode."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=1, n_slots=2, max_len=32, collect_logits=True
+    )
+    prompt = np.arange(2, 13, dtype=np.int32)  # length 11 → bucket 16
+    eng.submit(BASE_TENANT, prompt, 3)
+    done = eng.run()
+    req = next(iter(done.values()))
+    ref_toks, ref_logits = reference_decode(
+        cfg, eng.params, base_lambda(eng.params), prompt, 3, 32
+    )
+    assert req.tokens == ref_toks
+    np.testing.assert_allclose(np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4)

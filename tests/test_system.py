@@ -3,7 +3,6 @@
 warm-up "pretrain" a reduced RoBERTa-style encoder → pivoted-QR adapters →
 fine-tune ONLY λ (+ task head) on a synthetic GLUE task → beats chance;
 QR-LoRA parameter count ≪ LoRA ≪ FT (the paper's central table shape)."""
-import numpy as np
 import pytest
 
 from repro.benchlib import run_glue_method

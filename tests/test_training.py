@@ -3,7 +3,6 @@ loss functions, end-to-end loss decrease under full FT."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.data import lm_batches
