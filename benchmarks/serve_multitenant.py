@@ -3,9 +3,12 @@
 Measures the continuous-batching engine at increasing tenant heterogeneity
 (1 tenant = homogeneous batch … n_lanes distinct tenants), the cost of
 the batched multi-λ gather vs the plain single-adapter matmul, the
-per-tenant device-state accounting that motivates λ-only serving, and the
+per-tenant device-state accounting that motivates λ-only serving, the
 paged-vs-dense KV cache HBM footprint under short-prompt traffic (the
-regime where a dense ``(lanes, max_len)`` region is nearly all slack).
+regime where a dense ``(lanes, max_len)`` region is nearly all slack), and
+the copy-on-write prefix-sharing block footprint when N tenants of one
+family serve a common prompt (the regime the QR-LoRA pitch targets: tenants
+differ by ~600 λ scalars, their system preamble dominates KV HBM).
 """
 from __future__ import annotations
 
@@ -137,10 +140,65 @@ def bench_paged_vs_dense():
     )
 
 
+def bench_prefix_sharing():
+    """Copy-on-write prefix sharing: N tenants of one family (identical λ),
+    one common prompt.  Unshared, every lane re-prefills and privately holds
+    the full prompt; shared, the pool peaks at ~1× the prefix plus one
+    private growth block per lane.  The datum is peak blocks out of the
+    free list (the HBM high-water mark the pool must be sized for)."""
+    arch = "smollm-135m"
+    cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
+    lanes, bs, P, gen, max_len = (4, 8, 32, 8, 64) if SCALE != "paper" else (8, 16, 128, 32, 256)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+
+    peaks = {}
+    for mode, share in (("unshared", False), ("shared", True)):
+        eng = MultiTenantEngine(
+            cfg, n_lanes=lanes, n_slots=max(8, lanes + 1), max_len=max_len,
+            paged=True, block_size=bs, share_prefix=share,
+        )
+        fam = random_lambda(jax.random.PRNGKey(1), eng.params, 0.1)
+        for i in range(lanes):
+            eng.add_tenant(f"fam{i}", fam)  # one λ checkpoint, many tenants
+            eng.submit(f"fam{i}", prompt, gen)
+        t0 = time.time()
+        eng.run()
+        dt = time.time() - t0
+        peak = eng.allocator.peak_in_use
+        peaks[mode] = peak
+        hits = eng.prefix_cache.hits if eng.prefix_cache is not None else 0
+        emit(
+            f"serve_multitenant:prefix_share:{mode}",
+            dt / max(eng.steps, 1) * 1e6,
+            f"peak_blocks={peak};prefix_hits={hits};lanes={lanes};"
+            f"prompt={P};block_size={bs};"
+            f"block_bytes={eng.kv_cache_bytes() // eng.allocator.n_blocks}",
+        )
+    prefix_blocks = P // bs
+    tail_blocks = -(-((P % bs) + gen) // bs)
+    want = prefix_blocks + lanes * tail_blocks
+    assert peaks["shared"] <= want, (
+        f"shared-prefix peak {peaks['shared']} blocks exceeds "
+        f"1x prefix + {lanes} private tails = {want}"
+    )
+    assert peaks["unshared"] >= lanes * prefix_blocks, (
+        f"unshared peak {peaks['unshared']} below {lanes}x prefix — "
+        "benchmark workload no longer exercises duplication"
+    )
+    emit(
+        "serve_multitenant:prefix_share:saving",
+        0.0,
+        f"unshared_peak={peaks['unshared']};shared_peak={peaks['shared']};"
+        f"ratio={peaks['unshared'] / max(peaks['shared'], 1):.2f}x",
+    )
+
+
 def main():
     bench_bgmv_overhead()
     bench_engine_throughput()
     bench_paged_vs_dense()
+    bench_prefix_sharing()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Benchmark-trajectory gate: diff a BENCH_smoke.json against a baseline.
+
+CI's bench-smoke job stores each run's ``BENCH_smoke.json`` and feeds the
+previous run's snapshot back in as the baseline, so a hot path that quietly
+regresses fails the job instead of drifting for months.
+
+Per-metric policy (values are µs/call, written by ``benchmarks.common``):
+
+* ratio = current / baseline.
+* **fail**  — ratio > ``--max-ratio`` (default 1.5×) on a metric whose
+  baseline is above ``--min-us`` (default 100 µs).  Sub-threshold metrics
+  are jitter-dominated at smoke scale, so the same slowdown only **warns**.
+* **ignore** — either side is 0.0 (interpret-mode kernels emit 0 when the
+  real timing is meaningless) and metrics present on only one side (new or
+  retired benchmarks are reported, not failed).
+* ``--warn-only`` downgrades failures to warnings — used when the baseline
+  came from a different machine (e.g. the checked-in snapshot on a cache
+  miss), where absolute ratios are not comparable.
+
+Writes a GitHub-flavored markdown table to ``--summary`` (default stdout;
+point it at ``$GITHUB_STEP_SUMMARY`` in CI) and exits 1 on any failure.
+
+Usage:
+    python scripts/bench_compare.py BASELINE.json CURRENT.json \\
+        [--max-ratio 1.5] [--min-us 100] [--summary FILE] [--warn-only]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Delta:
+    name: str
+    baseline: Optional[float]  # µs/call; None = metric absent on that side
+    current: Optional[float]
+    status: str  # "ok" | "warn" | "fail" | "ignored" | "new" | "missing"
+    note: str = ""
+
+    @property
+    def ratio(self) -> Optional[float]:
+        if not self.baseline or self.current is None:
+            return None
+        return self.current / self.baseline
+
+
+def load_timings(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    # BENCH_smoke.json wraps timings under "us_per_call"; accept a bare
+    # {name: us} mapping too so doctored fixtures stay terse.
+    timings = data.get("us_per_call", data) if isinstance(data, dict) else {}
+    return {str(k): float(v) for k, v in timings.items()}
+
+
+def compare(
+    baseline: Dict[str, float],
+    current: Dict[str, float],
+    *,
+    max_ratio: float = 1.5,
+    min_us: float = 100.0,
+    warn_only: bool = False,
+) -> List[Delta]:
+    """Classify every metric on either side; sorted worst-regression first."""
+    deltas: List[Delta] = []
+    for name in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(name), current.get(name)
+        if b is None:
+            deltas.append(Delta(name, None, c, "new", "no baseline"))
+            continue
+        if c is None:
+            deltas.append(Delta(name, b, None, "missing", "benchmark disappeared"))
+            continue
+        if b == 0.0 or c == 0.0:
+            deltas.append(Delta(name, b, c, "ignored", "interpret-mode zero"))
+            continue
+        ratio = c / b
+        if ratio <= max_ratio:
+            deltas.append(Delta(name, b, c, "ok"))
+        elif b <= min_us:
+            deltas.append(
+                Delta(name, b, c, "warn", f"{ratio:.2f}x but baseline ≤ {min_us:g}µs")
+            )
+        elif warn_only:
+            deltas.append(
+                Delta(name, b, c, "warn", f"{ratio:.2f}x (cross-machine baseline)")
+            )
+        else:
+            deltas.append(Delta(name, b, c, "fail", f"{ratio:.2f}x > {max_ratio:g}x"))
+    order = {"fail": 0, "warn": 1, "missing": 2, "new": 3, "ok": 4, "ignored": 5}
+    deltas.sort(key=lambda d: (order[d.status], -(d.ratio or 0.0), d.name))
+    return deltas
+
+
+_ICON = {"ok": "✅", "warn": "⚠️", "fail": "❌", "ignored": "➖", "new": "🆕", "missing": "❓"}
+
+
+def render_markdown(deltas: List[Delta], *, max_ratio: float, min_us: float) -> str:
+    fails = sum(d.status == "fail" for d in deltas)
+    warns = sum(d.status == "warn" for d in deltas)
+    lines = [
+        "## Benchmark trajectory",
+        "",
+        f"{len(deltas)} metrics — **{fails} fail**, {warns} warn "
+        f"(fail: >{max_ratio:g}x on baselines >{min_us:g}µs).",
+        "",
+        "| metric | baseline µs | current µs | ratio | status |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    for d in deltas:
+        fmt = lambda v: "—" if v is None else f"{v:.1f}"
+        ratio = "—" if d.ratio is None else f"{d.ratio:.2f}x"
+        note = f" {d.note}" if d.note else ""
+        lines.append(
+            f"| `{d.name}` | {fmt(d.baseline)} | {fmt(d.current)} | {ratio} "
+            f"| {_ICON[d.status]} {d.status}{note} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="previous run's BENCH_smoke.json")
+    ap.add_argument("current", help="this run's BENCH_smoke.json")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="slowdown ratio that fails the gate (default 1.5)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="baselines at or below this only warn (default 100)")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown table to this file "
+                    "(e.g. $GITHUB_STEP_SUMMARY); default: stdout")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="downgrade failures to warnings (cross-machine baseline)")
+    args = ap.parse_args(argv)
+
+    deltas = compare(
+        load_timings(args.baseline), load_timings(args.current),
+        max_ratio=args.max_ratio, min_us=args.min_us, warn_only=args.warn_only,
+    )
+    md = render_markdown(deltas, max_ratio=args.max_ratio, min_us=args.min_us)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md)
+    print(md)
+    fails = [d for d in deltas if d.status == "fail"]
+    if fails:
+        for d in fails:
+            print(f"REGRESSION {d.name}: {d.baseline:.1f}µs → {d.current:.1f}µs "
+                  f"({d.ratio:.2f}x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,48 @@
+"""jax version-compat shims, consolidated.
+
+These used to live in three places (``kernels/qrlora_matmul.CompilerParams``,
+``launch/mesh.make_mesh``, ``sharding/rules.shard_map``) — one module per
+renamed jax API.  The ROADMAP rule was "consolidate when a fourth appears";
+the serving refactor got there first, so everything version-sensitive now
+lives here and the old homes re-export for their call sites.
+
+Covered renames across the jax 0.4.x–0.5.x span this repo supports:
+
+* ``pltpu.TPUCompilerParams``            → ``pltpu.CompilerParams``
+* ``jax.make_mesh`` without/with ``axis_types`` (+ ``jax.sharding.AxisType``)
+* ``jax.experimental.shard_map.shard_map(check_rep=)``
+                                         → ``jax.shard_map(check_vma=)``
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams → CompilerParams across 0.4.x releases
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions: `axis_types` (and
+    `jax.sharding.AxisType`) only exist on newer releases — pass them when
+    available (explicit Auto axes), fall back to the bare call otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """`shard_map` across jax versions: the new top-level `jax.shard_map`
+    (replication checking via ``check_vma``) vs the older
+    `jax.experimental.shard_map.shard_map` (``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    return sm_old(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

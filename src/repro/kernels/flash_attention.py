@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.qrlora_matmul import CompilerParams
+from repro.compat import CompilerParams
 
 _NEG = -1e30
 

@@ -26,8 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams → CompilerParams across 0.4.x releases
-CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.compat import CompilerParams
 
 
 def _kernel(x_ref, w_ref, b_ref, a_ref, lam_ref, o_ref, acc_ref, pacc_ref, *, scale, nk, nn):

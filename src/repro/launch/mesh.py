@@ -8,15 +8,7 @@ from __future__ import annotations
 
 import jax
 
-
-def make_mesh(shape, axes):
-    """`jax.make_mesh` across jax versions: `axis_types` (and
-    `jax.sharding.AxisType`) only exist on newer releases — pass them when
-    available (explicit Auto axes), fall back to the bare call otherwise."""
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+from repro.compat import make_mesh as make_mesh  # version shim lives in compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -51,6 +51,16 @@ def main(argv=None):
         help="KV pool size (default: dense-equivalent capacity + trash block)",
     )
     ap.add_argument(
+        "--share-prefix", action="store_true",
+        help="copy-on-write prefix sharing (requires --paged): requests "
+        "repeating a prompt prefix reuse its resident KV blocks",
+    )
+    ap.add_argument(
+        "--watermark", type=int, default=0,
+        help="free blocks admission keeps in reserve as decode-growth "
+        "headroom (reduces mid-decode preemptions)",
+    )
+    ap.add_argument(
         "--dtype", default="float32",
         help="float32 default: the verification compares fused-multi-λ vs "
         "merged-weight logits, which only makes sense at full precision",
@@ -75,11 +85,14 @@ def main(argv=None):
         paged=args.paged,
         block_size=args.block_size,
         n_blocks=args.n_blocks,
+        share_prefix=args.share_prefix,
+        watermark=args.watermark,
     )
     if args.paged:
         print(
             f"[serve_multi] paged KV: block_size={args.block_size} "
             f"pool={engine.allocator.capacity} blocks "
+            f"share_prefix={args.share_prefix} watermark={args.watermark} "
             f"cache_bytes={engine.kv_cache_bytes()}"
         )
 
@@ -111,6 +124,19 @@ def main(argv=None):
         f"({engine.decoded_tokens/dt:.0f} tok/s) over {engine.steps} shared "
         "decode steps"
     )
+    if args.paged:
+        msg = (
+            f"[serve_multi] pool peak={engine.allocator.peak_in_use}/"
+            f"{engine.allocator.capacity} blocks, "
+            f"preemptions={engine.preemptions}, cow_forks={engine.cow_forks}"
+        )
+        if engine.prefix_cache is not None:
+            msg += (
+                f", prefix hits={engine.prefix_cache.hits} "
+                f"misses={engine.prefix_cache.misses} "
+                f"cached={engine.prefix_cache.cached_blocks} blocks"
+            )
+        print(msg)
     for uid in sorted(done):
         tenant, _ = reqs[uid]
         print(f"[serve_multi] {tenant}: {done[uid].tokens[:12]}")

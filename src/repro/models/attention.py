@@ -186,11 +186,8 @@ def attention(
     new_cache = None
     if cache is not None and not is_cross:
         if "block_tbl" in cache:  # paged KV cache (block pool + table)
-            if S != 1:
-                raise NotImplementedError(
-                    "paged prefill goes through a dense lane cache spliced "
-                    "into blocks by the engine (serving/engine.py)"
-                )
+            if S != 1:  # block-aligned prefill: scatter straight into pool blocks
+                return _paged_prefill(p, q, k, v, cache, cfg, adp, scale, sdt)
             return _paged_decode(p, q, k, v, cache, cfg, adp, scale, sdt)
         if S == 1:  # decode
             nm = _decode_shard_names(cfg)
@@ -227,6 +224,46 @@ def attention(
             mask = (jnp.arange(Sk)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
         else:
             mask = jnp.ones((1, 1, 1, S, Sk), bool)
+        out = _softmax_attend(q, k, v, mask, scale, scores_dtype=sdt)
+    o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
+    return shard(o, "batch", None, None), new_cache
+
+
+def _paged_prefill(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
+    """Block-aligned prefill against a paged cache.
+
+    ``cache`` is a prompt-shaped view (``transformer.paged_prefill_view``):
+    ``k``/``v`` are the shared pools and ``block_tbl`` (B, ceil(S/bs)) names
+    this prompt's *write targets* per block — freshly allocated private
+    blocks, or trash block 0 for positions whose K/V is already resident
+    (shared prefix blocks) and for bucket padding.  Attention itself is the
+    plain causal pass over the (bucketed) prompt, bit-identical to the dense
+    prefill path; only the cache write changes: position ``j`` of lane ``b``
+    scatters to ``pool[tbl[b, j // bs], j % bs]`` instead of a dense
+    ``(max_len,)`` lane region that the engine would re-splice.
+    """
+    B, S, H, dh = q.shape
+    n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
+    tbl = cache["block_tbl"]
+
+    pos = jnp.arange(S)
+    blk = jnp.take_along_axis(tbl, jnp.broadcast_to(pos // bs, (B, S)), axis=1)
+    flat = (blk * bs + pos[None, :] % bs).reshape(-1)  # (B·S,)
+    kp = cache["k"].reshape(n_blocks * bs, *cache["k"].shape[2:])
+    vp = cache["v"].reshape(n_blocks * bs, *cache["v"].shape[2:])
+    kp = kp.at[flat].set(k.reshape(B * S, *k.shape[2:]).astype(kp.dtype))
+    vp = vp.at[flat].set(v.reshape(B * S, *v.shape[2:]).astype(vp.dtype))
+    new_cache = {
+        "k": kp.reshape(cache["k"].shape),
+        "v": vp.reshape(cache["v"].shape),
+        "block_tbl": tbl,
+        "idx": jnp.full_like(cache["idx"], S),  # true length overrides in decoder_prefill
+    }
+
+    if S > _CHUNK_THRESHOLD:
+        out = _attend_chunked(q, k, v, scale, causal=True, scores_dtype=sdt)
+    else:
+        mask = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
         out = _softmax_attend(q, k, v, mask, scale, scores_dtype=sdt)
     o = adapted_matmul(out.reshape(B, S, H * dh), p["wo"], (adp or {}).get("wo"))
     return shard(o, "batch", None, None), new_cache

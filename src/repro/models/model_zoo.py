@@ -148,6 +148,12 @@ class Model:
             block_size=block_size, n_blocks=n_blocks,
         )
 
+    def paged_prefill_view(self, cache, write_ids):
+        return tfm_lib.paged_prefill_view(cache, write_ids)
+
+    def commit_paged_prefill(self, cache, filled, lane, table_row, length):
+        return tfm_lib.commit_paged_prefill(cache, filled, lane, table_row, length)
+
     def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None,
                 seg_ids=None, length=None):
         return tfm_lib.decoder_prefill(

@@ -462,6 +462,54 @@ def init_decode_state(
     return cache
 
 
+def paged_prefill_view(cache, write_ids):
+    """1-lane paged-cache view for block-aligned admission prefill.
+
+    Aliases the full engine cache's pools; the single block-table row is
+    ``write_ids`` (ceil(bucket/block_size),) — this prompt's *write targets*
+    per block, with trash block 0 standing in for already-resident shared
+    prefix blocks and bucket padding.  ``decoder_prefill`` on this view
+    scatters the prompt's K/V straight into the pool (attention.py's
+    ``_paged_prefill``); ``commit_paged_prefill`` folds the result back."""
+    a = cache["layers"]["attn"]
+    G = a["idx"].shape[0]
+    nb = write_ids.shape[0]
+    return {
+        "pos": jnp.zeros((1,), jnp.int32),
+        "layers": {
+            "attn": {
+                "k": a["k"],
+                "v": a["v"],
+                "block_tbl": jnp.broadcast_to(
+                    write_ids.astype(jnp.int32)[None, None, :], (G, 1, nb)
+                ),
+                "idx": jnp.zeros((G, 1), jnp.int32),
+            }
+        },
+    }
+
+
+def commit_paged_prefill(cache, filled, lane, table_row, length):
+    """Adopt a block-aligned prefill into the engine cache: take the updated
+    pools from the prefill view, point ``lane``'s block-table row at its
+    blocks (``table_row`` (max_blocks,), tail entries → trash block 0), and
+    set its offsets to the true prompt ``length``."""
+    a, f = cache["layers"]["attn"], filled["layers"]["attn"]
+    G, _, mb = a["block_tbl"].shape
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    pos = jax.lax.dynamic_update_slice(cache["pos"], length, (lane,))
+    tbl = jax.lax.dynamic_update_slice(
+        a["block_tbl"],
+        jnp.broadcast_to(table_row.astype(jnp.int32)[None, None, :], (G, 1, mb)),
+        (0, lane, 0),
+    )
+    idx = jax.lax.dynamic_update_slice(
+        a["idx"], jnp.broadcast_to(length, (G, 1)), (0, lane)
+    )
+    attn = {"k": f["k"], "v": f["v"], "block_tbl": tbl, "idx": idx}
+    return {"pos": pos, "layers": {"attn": attn}}
+
+
 def decoder_prefill(
     params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None,
     seg_ids=None, length=None,

@@ -40,9 +40,11 @@ Pieces
   λ into packed device tables, LRU eviction, slot-0 base tenant.
 * :mod:`repro.serving.scheduler` — continuous batching: FIFO request queue
   over fixed decode lanes, prefill/decode interleaving, per-lane slot ids.
-* :mod:`repro.serving.paging`    — block allocator for the paged KV cache:
-  a global per-layer block pool + per-lane block tables replaces the dense
-  ``(lanes, max_len)`` region, so cache HBM tracks resident tokens.
+* :mod:`repro.serving.paging`    — ref-counted block allocator + prefix
+  cache for the paged KV cache: a global per-layer block pool + per-lane
+  block tables replaces the dense ``(lanes, max_len)`` region, so cache HBM
+  tracks resident tokens; requests repeating a prompt prefix share its
+  blocks copy-on-write.
 * :mod:`repro.serving.engine`    — the decode loop: slot-indexed per-lane
   (or paged) KV cache, admission splicing, bucketed prefill, greedy
   generation, plus the merged-weight per-tenant reference oracle.
@@ -57,7 +59,7 @@ from repro.serving.engine import (
     merge_tenant_params,
     reference_decode,
 )
-from repro.serving.paging import BlockAllocator, PoolExhausted
+from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
 from repro.serving.registry import BASE_TENANT, AdapterRegistry, extract_lambda, random_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
@@ -68,6 +70,7 @@ __all__ = [
     "ContinuousBatchScheduler",
     "MultiTenantEngine",
     "PoolExhausted",
+    "PrefixCache",
     "Request",
     "base_lambda",
     "extract_lambda",

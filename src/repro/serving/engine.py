@@ -11,23 +11,37 @@ Glues the pieces together:
   ``adapter_api.adapted_matmul`` (XLA ``take`` gather or the
   ``qrlora_bgmv`` Pallas kernel).
 * slot-indexed KV-cache management — the cache is ``per_lane=True`` (each
-  lane has its own write offset and position), admission prefills a single
-  request into a lane-1 cache and splices it into the shared cache, so
-  lanes hold sequences of different tenants, lengths, and ages.
+  lane has its own write offset and position), so lanes hold sequences of
+  different tenants, lengths, and ages.
 * ``paged=True`` swaps the dense ``(lanes, max_len)`` KV region for a
-  global block pool + per-lane block tables (``serving/paging.py``):
-  admission allocates ``ceil((prompt+gen)/block_size)`` blocks and splices
-  the prefilled K/V into them; retirement frees them, so HBM tracks actual
-  resident tokens instead of ``lanes × max_len`` worst case.  When the
-  pool cannot hold the next request, admission defers it (strict FIFO)
-  until a retirement frees enough blocks.
+  global block pool + per-lane block tables (``serving/paging.py``).
+  Admission allocates only the *prompt's* ``ceil(P/block_size)`` blocks and
+  prefills them **block-aligned** — the prompt's K/V scatters straight into
+  pool blocks (``models/attention._paged_prefill``), no dense lane-1
+  intermediate.  Decode **grows lazily**: a lane gets its next block only
+  when its write position crosses a block boundary; when the pool is
+  exhausted, unreferenced prefix-cache blocks are scavenged first, then the
+  *youngest* lane is preempted back to the front of the queue (its blocks
+  freed, its output re-derived deterministically on re-admission), so the
+  oldest lane can always finish — decode never deadlocks.
+* ``share_prefix=True`` adds **copy-on-write prefix sharing**: a hash-chain
+  cache maps (tenant-family λ digest, prefill bucket, full-block token
+  prefix) → pool block, so requests repeating a prompt prefix *reuse* the
+  resident K/V blocks (refcount++) instead of writing new copies — N lanes
+  on one prompt hold ~1× the prefix plus N private tails.  Prefill writes
+  into shared blocks are redirected to the trash block; a lane about to
+  *decode* into a shared block forks a private copy first (CoW).  The
+  partial tail block of a prompt is always private and never cached.
 
 Admission prefill pads prompts to power-of-two buckets (true length rides
 along and masks the tail), so 10 mixed-length prompts cost ≤ log2(max_len)
-prefill compilations instead of one per distinct length.
+prefill compilations instead of one per distinct length.  The prefix cache
+keys on the bucket too: two prefills only share K/V when they ran the same
+compiled program, which keeps shared-prefix decode bit-identical to the
+unshared engine.
 
-The engine is greedy-decode and host-driven: ``step()`` = admit + one
-decode step; ``run()`` loops until queue and lanes drain.
+The engine is greedy-decode and host-driven: ``step()`` = admit + grow +
+one decode step; ``run()`` loops until queue and lanes drain.
 """
 from __future__ import annotations
 
@@ -40,7 +54,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
 from repro.models import build_model
-from repro.serving.paging import BlockAllocator
+from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
 from repro.serving.registry import AdapterRegistry, extract_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
@@ -74,6 +88,8 @@ class MultiTenantEngine:
         paged: bool = False,
         block_size: int = 16,
         n_blocks: Optional[int] = None,
+        share_prefix: bool = False,
+        watermark: int = 0,
     ):
         if cfg.family not in _LANE_FAMILIES:
             raise NotImplementedError(
@@ -93,6 +109,8 @@ class MultiTenantEngine:
         self.collect_logits = collect_logits
         self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.paged = paged
+        if share_prefix and not paged:
+            raise ValueError("share_prefix requires paged=True (blocks to share)")
         if paged:
             if max_len % block_size:
                 raise ValueError(
@@ -103,12 +121,27 @@ class MultiTenantEngine:
             if n_blocks is None:
                 n_blocks = 1 + n_lanes * self.max_blocks  # dense-equivalent
             self.allocator = BlockAllocator(n_blocks, block_size)
+            if not 0 <= watermark < self.allocator.capacity:
+                raise ValueError(
+                    f"watermark={watermark} must be in [0, capacity={self.allocator.capacity})"
+                )
+            self.watermark = watermark
+            self.prefix_cache = PrefixCache(self.allocator) if share_prefix else None
             self._lane_blocks: Dict[int, List[int]] = {}
+            # uid → prefix blocks pinned (incref'd) at gate approval; consumed
+            # by _admit_paged in the same admission round
+            self._gate_matches: Dict[int, List[int]] = {}
+            self._admit_seq = 0
+            self.preemptions = 0
+            self.cow_forks = 0
             self.cache = self.model.init_decode_state(
                 n_lanes, max_len, self.dtype, paged=True,
                 block_size=block_size, n_blocks=n_blocks,
             )
         else:
+            if watermark:
+                raise ValueError("watermark requires paged=True (blocks to reserve)")
+            self.prefix_cache = None
             self.cache = self.model.init_decode_state(
                 n_lanes, max_len, self.dtype, per_lane=True
             )
@@ -139,33 +172,45 @@ class MultiTenantEngine:
             )
             return {"pos": pos, "layers": layers}
 
-        def _splice_paged(big, small, lane, block_ids, length):
-            """Scatter a dense 1-lane prefill cache into the lane's freshly
-            allocated pool blocks and point its table row at them.  Entries
-            of ``block_ids`` past the allocation name trash block 0 — their
-            (padding) blocks land there and are never read."""
-            pos = jax.lax.dynamic_update_slice_in_dim(
-                big["pos"], small["pos"], lane, axis=0
+        def _prefill_paged(view, cache, tokens, seg, length, lane, write_ids, table_row):
+            """Block-aligned admission prefill: run the prompt through a
+            1-lane view whose table row is ``write_ids`` (shared prefix
+            blocks and padding redirected to trash block 0), then commit the
+            updated pools + the lane's real ``table_row`` into the cache."""
+            pview = model.paged_prefill_view(cache, write_ids)
+            logits, filled = model.prefill(
+                view, pview, tokens=tokens, seg_ids=seg, length=length
             )
-            bg, sm = big["layers"]["attn"], small["layers"]["attn"]
-            G, n_blocks, bs = bg["k"].shape[:3]
-            mb = bg["block_tbl"].shape[2]
-            kb = sm["k"][:, 0].reshape(G, mb, bs, *sm["k"].shape[3:])
-            vb = sm["v"][:, 0].reshape(G, mb, bs, *sm["v"].shape[3:])
-            k = bg["k"].at[:, block_ids].set(kb.astype(bg["k"].dtype))
-            v = bg["v"].at[:, block_ids].set(vb.astype(bg["v"].dtype))
+            return logits, model.commit_paged_prefill(
+                cache, filled, lane, table_row, length
+            )
+
+        def _append_block(cache, lane, slot, block_id):
+            """Lazy growth: point table entry ``slot`` of ``lane`` at a
+            freshly allocated block."""
+            a = cache["layers"]["attn"]
+            G = a["block_tbl"].shape[0]
             tbl = jax.lax.dynamic_update_slice(
-                bg["block_tbl"],
-                jnp.broadcast_to(block_ids.astype(jnp.int32), (G, 1, mb)),
-                (0, lane, 0),
+                a["block_tbl"],
+                jnp.broadcast_to(jnp.asarray(block_id, jnp.int32), (G, 1, 1)),
+                (0, lane, slot),
             )
-            idx = jax.lax.dynamic_update_slice(
-                bg["idx"],
-                jnp.broadcast_to(length.astype(jnp.int32), (G, 1)),
-                (0, lane),
+            return {"pos": cache["pos"], "layers": {"attn": {**a, "block_tbl": tbl}}}
+
+        def _fork_block(cache, lane, slot, src, dst):
+            """Copy-on-write: copy pool block ``src`` → ``dst`` on every
+            layer and repoint the lane's table entry at the private copy."""
+            a = cache["layers"]["attn"]
+            G = a["block_tbl"].shape[0]
+            k = a["k"].at[:, dst].set(a["k"][:, src])
+            v = a["v"].at[:, dst].set(a["v"][:, src])
+            tbl = jax.lax.dynamic_update_slice(
+                a["block_tbl"],
+                jnp.broadcast_to(jnp.asarray(dst, jnp.int32), (G, 1, 1)),
+                (0, lane, slot),
             )
-            attn = {"k": k, "v": v, "block_tbl": tbl, "idx": idx}
-            return {"pos": pos, "layers": {"attn": attn}}
+            attn = {"k": k, "v": v, "block_tbl": tbl, "idx": a["idx"]}
+            return {"pos": cache["pos"], "layers": {"attn": attn}}
 
         def _release(cache, lane):
             """Retire a lane: point its table row at trash block 0 and zero
@@ -188,7 +233,9 @@ class MultiTenantEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._splice = jax.jit(_splice)
-        self._splice_paged = jax.jit(_splice_paged)
+        self._prefill_paged = jax.jit(_prefill_paged)
+        self._append_block = jax.jit(_append_block)
+        self._fork_block = jax.jit(_fork_block)
         self._release = jax.jit(_release)
 
     # -- tenants ------------------------------------------------------------
@@ -215,10 +262,16 @@ class MultiTenantEngine:
                 f"max_len={self.max_len}"
             )
         if self.paged:
-            need = self.allocator.blocks_for(prompt.size + max_new_tokens)
-            if need > self.allocator.capacity:
+            # feasibility only — blocks are acquired lazily, but a request
+            # whose worst-case (unshared) footprint exceeds the pool, or
+            # whose prompt can't be admitted while keeping the decode-growth
+            # watermark free, could never run to completion.
+            worst = self.allocator.blocks_for(prompt.size + max_new_tokens)
+            at_admit = self.allocator.blocks_for(prompt.size) + self.watermark
+            if max(worst, at_admit) > self.allocator.capacity:
                 raise ValueError(
-                    f"request needs {need} blocks but the pool only has "
+                    f"request needs {worst} blocks ({at_admit} at admission "
+                    f"with watermark={self.watermark}) but the pool only has "
                     f"{self.allocator.capacity} — it could never be admitted"
                 )
         # pin from submission (not admission): a queued request must keep its
@@ -226,35 +279,118 @@ class MultiTenantEngine:
         self.registry.pin(tenant)
         return self.scheduler.submit(tenant, prompt, max_new_tokens)
 
-    # -- the serving loop ---------------------------------------------------
+    # -- paged block accounting ---------------------------------------------
 
-    def _blocks_needed(self, req: Request) -> int:
-        return self.allocator.blocks_for(req.prompt.size + req.max_new_tokens)
+    def _family(self, req: Request) -> bytes:
+        """Prefix-cache family key: tenant λ digest + prefill bucket.  Two
+        prefills may only share K/V blocks when they ran the same adapter
+        *and* the same compiled prefill program (same bucket) — that keeps
+        shared-prefix output bit-identical to the unshared engine."""
+        Pb = _bucket_len(req.prompt.size, self.max_len)
+        return self.registry.digest(req.tenant) + Pb.to_bytes(4, "little")
 
     def _admission_gate(self):
         """Pool gate for ``scheduler.admit``: approving a request *reserves*
-        its blocks for this admission round, so one round can't hand the
-        same free blocks to two requests (allocation happens per-request
-        later in ``_admit``)."""
+        its fresh prompt blocks for this admission round (so one round can't
+        hand the same free blocks to two requests) and keeps ``watermark``
+        blocks free as decode-growth headroom.  Approval also *pins*
+        (increfs) the request's matched prefix blocks immediately — a later
+        request's gate may evict cache entries in the same round, and the
+        reservation must survive that — stashing them for ``_admit_paged``.
+        When the FIFO head starves while the prefix cache hoards
+        reclaimable blocks, the cache is evicted LRU-first until the head
+        fits or nothing is left."""
         reserved = [0]
 
         def gate(req: Request) -> bool:
-            need = self._blocks_needed(req)
-            if self.allocator.n_free - reserved[0] >= need:
-                reserved[0] += need
-                return True
-            return False
+            while True:
+                cached: List[int] = []
+                if self.prefix_cache is not None:
+                    cached = self.prefix_cache.match(self._family(req), req.prompt)
+                need = self.allocator.blocks_for(req.prompt.size) - len(cached)
+                if self.allocator.n_free - reserved[0] >= need + self.watermark:
+                    for b in cached:
+                        self.allocator.incref(b)
+                    if self.prefix_cache is not None:
+                        self.prefix_cache.hits += len(cached)
+                        self.prefix_cache.misses += (
+                            req.prompt.size // self.block_size - len(cached)
+                        )
+                    self._gate_matches[req.uid] = cached
+                    reserved[0] += need
+                    return True
+                if self.prefix_cache is None or not len(self.prefix_cache):
+                    return False
+                self.prefix_cache.evict_one()
 
         return gate
+
+    def _reclaim_one_block(self, req: Request) -> Optional[int]:
+        """One block for ``req``'s decode growth.  Scavenge cache-only
+        prefix blocks first; then preempt the youngest lane (possibly
+        ``req`` itself, in which case return None).  The oldest lane always
+        wins this race, so decode can never deadlock on an exhausted pool."""
+        while not self.allocator.can_alloc(1):
+            if self.prefix_cache is not None and len(self.prefix_cache):
+                self.prefix_cache.evict_one()
+                continue
+            active = self.scheduler.active()
+            if not active:  # unreachable: req is active when growing
+                raise PoolExhausted("no active lane to preempt")
+            victim = max(active, key=lambda r: r.admit_seq)
+            self._preempt(victim)
+            if victim is req:
+                return None
+        return self.allocator.alloc(1)[0]
+
+    def _preempt(self, victim: Request) -> None:
+        """Free a lane's blocks and kick its request to the queue front;
+        greedy decode re-derives the lost tokens on re-admission."""
+        lane = victim.lane
+        for b in self._lane_blocks.pop(lane):
+            self.allocator.decref(b)
+        self.cache = self._release(self.cache, lane)
+        self.scheduler.preempt(victim)
+        self.preemptions += 1
+
+    def _grow_lanes(self) -> None:
+        """Lazy growth, oldest lane first: give every active lane the block
+        its next decode write lands in, allocating (or CoW-forking a shared
+        block) on block-boundary crossings."""
+        bs = self.block_size
+        for req in sorted(self.scheduler.active(), key=lambda r: r.admit_seq):
+            if req.lane < 0:  # preempted by an older lane's growth this pass
+                continue
+            write_pos = req.prompt.size + len(req.tokens) - 1
+            blk_idx = write_pos // bs
+            blocks = self._lane_blocks[req.lane]
+            if blk_idx >= len(blocks):
+                bid = self._reclaim_one_block(req)
+                if bid is None:
+                    continue
+                blocks.append(bid)
+                self.cache = self._append_block(self.cache, req.lane, blk_idx, bid)
+            elif self.allocator.is_shared(blocks[blk_idx]):
+                # copy-on-write: never write into a block someone else reads
+                src = blocks[blk_idx]
+                if self.allocator.can_alloc(1):
+                    dst = self.allocator.fork(src)
+                else:
+                    dst = self._reclaim_one_block(req)
+                    if dst is None:
+                        continue
+                    self.allocator.decref(src)  # lane's ref moves to the copy
+                blocks[blk_idx] = dst
+                self.cache = self._fork_block(self.cache, req.lane, blk_idx, src, dst)
+                self.cow_forks += 1
+
+    # -- the serving loop ---------------------------------------------------
 
     def _admit(self, finished: List[Request]) -> None:
         view = self._params_view()
         gate = self._admission_gate() if self.paged else None
         for req in self.scheduler.admit(gate):
             req.slot = self.registry.lookup(req.tenant)  # pinned since submit
-            lane_cache = self.model.init_decode_state(
-                1, self.max_len, self.dtype, per_lane=True
-            )
             seg = jnp.full((1,), req.slot, jnp.int32)
             # prompt-length bucketing: pad to a power of two so distinct
             # prompt lengths share prefill compilations; true length masks
@@ -263,22 +399,58 @@ class MultiTenantEngine:
             padded = np.zeros((Pb,), np.int32)
             padded[:P] = req.prompt
             self.prefill_buckets.add(Pb)
-            logits, lane_cache = self._prefill(
-                view, lane_cache, jnp.asarray(padded)[None, :], seg,
-                jnp.full((1,), P, jnp.int32),
-            )
+            length = jnp.full((1,), P, jnp.int32)
             if self.paged:
-                ids = self.allocator.alloc(self._blocks_needed(req))
-                self._lane_blocks[req.lane] = ids
-                padded_ids = np.zeros((self.max_blocks,), np.int32)
-                padded_ids[: len(ids)] = ids  # tail → trash block 0
-                self.cache = self._splice_paged(
-                    self.cache, lane_cache, req.lane, jnp.asarray(padded_ids),
-                    jnp.asarray(P, jnp.int32),
-                )
+                logits = self._admit_paged(req, view, padded, seg, length)
             else:
+                lane_cache = self.model.init_decode_state(
+                    1, self.max_len, self.dtype, per_lane=True
+                )
+                logits, lane_cache = self._prefill(
+                    view, lane_cache, jnp.asarray(padded)[None, :], seg, length
+                )
                 self.cache = self._splice(self.cache, lane_cache, req.lane)
             self._emit(req, np.asarray(logits[0]), finished)
+
+    def _admit_paged(self, req: Request, view, padded, seg, length):
+        """Paged admission: adopt the shared-prefix blocks the gate pinned,
+        allocate private blocks for the rest of the prompt only (lazy — gen
+        blocks come later), and prefill block-aligned."""
+        P, bs = req.prompt.size, self.block_size
+        cached = self._gate_matches.pop(req.uid, [])
+        if self.prefix_cache is not None:
+            # re-match: an earlier admission in this round may have filed
+            # this very prefix (same-round sharing).  Only *extend* the
+            # gate-pinned base — extending allocates less than the gate
+            # reserved, never more — and only when the fresh chain agrees
+            # with the pinned blocks (eviction races can reshuffle entries).
+            fresh = self.prefix_cache.match(self._family(req), req.prompt)
+            if len(fresh) > len(cached) and fresh[: len(cached)] == cached:
+                for b in fresh[len(cached):]:
+                    self.allocator.incref(b)
+                self.prefix_cache.hits += len(fresh) - len(cached)
+                self.prefix_cache.misses -= len(fresh) - len(cached)
+                cached = fresh
+        new_ids = self.allocator.alloc(self.allocator.blocks_for(P) - len(cached))
+        blocks = cached + new_ids
+        self._lane_blocks[req.lane] = blocks
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+
+        nb = -(-len(padded) // bs)  # bucket table width
+        write_ids = np.zeros((nb,), np.int32)  # cached prefix + padding → trash
+        write_ids[len(cached): len(blocks)] = new_ids
+        table_row = np.zeros((self.max_blocks,), np.int32)
+        table_row[: len(blocks)] = blocks
+        logits, self.cache = self._prefill_paged(
+            view, self.cache, jnp.asarray(padded)[None, :], seg, length,
+            req.lane, jnp.asarray(write_ids), jnp.asarray(table_row),
+        )
+        if self.prefix_cache is not None:
+            # file this prompt's full blocks for reuse (the partial tail —
+            # still receiving decode writes — is never cached)
+            self.prefix_cache.insert(self._family(req), req.prompt, blocks)
+        return logits
 
     def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
         req.tokens.append(int(logits_row.argmax()))
@@ -290,15 +462,19 @@ class MultiTenantEngine:
             self.scheduler.finish(req)
             self.registry.unpin(req.tenant)
             if self.paged:
-                self.allocator.free(self._lane_blocks.pop(lane))
+                for b in self._lane_blocks.pop(lane):
+                    self.allocator.decref(b)  # shared blocks survive in-cache
                 self.cache = self._release(self.cache, lane)
             finished.append(req)
 
     def step(self) -> List[Request]:
-        """Admit waiting requests, run one shared decode step over all
-        lanes; returns requests that finished this step."""
+        """Admit waiting requests, grow/CoW-fork lanes crossing block
+        boundaries, run one shared decode step over all lanes; returns
+        requests that finished this step."""
         finished: List[Request] = []
         self._admit(finished)
+        if self.paged:
+            self._grow_lanes()
         active = self.scheduler.active()
         if not active:
             return finished
@@ -330,6 +506,17 @@ class MultiTenantEngine:
         return sum(
             leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.cache)
         )
+
+    def blocks_in_use(self) -> int:
+        """Blocks currently out of the free list (lane-held + cache-held)."""
+        return self.allocator.n_in_use
+
+    def release_prefix_cache(self) -> int:
+        """Drop every prefix-cache entry; returns blocks freed to the pool
+        (entries still referenced by active lanes free nothing)."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.clear()
 
     @property
     def prefill_compilations(self) -> int:

@@ -1,4 +1,4 @@
-"""Block allocator for the paged KV cache.
+"""Block allocator + prefix cache for the paged KV cache.
 
 The dense per-lane decode cache sizes every lane for the worst case:
 ``(lanes, max_len, KV, dh)`` per layer, regardless of how long each lane's
@@ -11,24 +11,36 @@ plus a per-lane *block table* ``(lanes, max_len/block_size)`` of pool
 indices.  A sequence of ``T`` tokens holds ``ceil(T / block_size)`` blocks —
 HBM tracks actual traffic instead of ``lanes × max_len``.
 
-This module is the host-side bookkeeping: a free-list allocator with the
-same role as vLLM's ``BlockAllocator``.  Device-side state (the pools and
-tables inside the decode cache) is written by the engine's admission splice
-and read by the paged decode-attention kernel.
+This module is the host-side bookkeeping: a **ref-counted** free-list
+allocator with the same role as vLLM's ``BlockAllocator``, plus the
+hash-chain :class:`PrefixCache` that lets requests sharing a prompt prefix
+hold the *same* physical blocks (copy-on-write sharing).  Device-side state
+(the pools and tables inside the decode cache) is written by the engine's
+block-aligned prefill scatter and read by the paged decode-attention kernel.
 
 Conventions
 ===========
 
-* **Block 0 is reserved** as the trash block.  Idle lanes and padded table
-  entries point at it, so the shared decode step can scatter their (masked,
-  never-read) writes somewhere harmless instead of branching per lane.
-* Allocation is all-or-nothing per request: admission asks for every block
-  the request can ever touch (``ceil((prompt + max_new_tokens) / bs)``), so
-  a request admitted once can never die of pool exhaustion mid-decode.
+* **Block 0 is reserved** as the trash block.  Idle lanes, padded table
+  entries, and redirected writes into cached prefix blocks point at it, so
+  the shared decode/prefill scatter needs no per-lane branching.
+* **Reference counts**: ``alloc`` hands out blocks at refcount 1; sharing a
+  block (a second lane, or the prefix cache itself) is an ``incref``;
+  releasing one side is a ``decref``; the block returns to the free list
+  only when its count reaches 0.  A block with refcount > 1 is *shared* and
+  must never be written — a writer first ``fork``\\ s a private copy.
+* **Lazy growth**: the engine allocates only the prompt's blocks at
+  admission and grows a lane by one block when decode crosses a block
+  boundary (``serving/engine.py``); exhaustion is resolved by evicting
+  cache-only prefix blocks, then preempting the youngest lane.
 """
 from __future__ import annotations
 
-from typing import List
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Sequence
+
+import numpy as np
 
 
 class PoolExhausted(RuntimeError):
@@ -36,7 +48,8 @@ class PoolExhausted(RuntimeError):
 
 
 class BlockAllocator:
-    """Free-list over ``n_blocks`` KV blocks; block 0 reserved for trash."""
+    """Ref-counted free list over ``n_blocks`` KV blocks; block 0 reserved
+    for trash (never allocated, never freed, never shared)."""
 
     def __init__(self, n_blocks: int, block_size: int):
         if n_blocks < 2:
@@ -47,13 +60,18 @@ class BlockAllocator:
         self.block_size = block_size
         # LIFO free list: lowest ids handed out first (stable test behavior)
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}
+        self.peak_in_use = 0  # high-water mark of blocks out of the free list
 
     # -- capacity -----------------------------------------------------------
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.capacity - self.n_free
 
     @property
     def capacity(self) -> int:
@@ -67,11 +85,44 @@ class BlockAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= self.n_free
 
+    # -- refcounts ----------------------------------------------------------
+
+    def ref_count(self, b: int) -> int:
+        return self._refs.get(b, 0)
+
+    def is_shared(self, b: int) -> bool:
+        return self.ref_count(b) > 1
+
+    def incref(self, b: int) -> None:
+        """Add an owner to an allocated block (a sharing lane or the prefix
+        cache).  Sharing the trash block or a free block is a bug."""
+        if b == 0:
+            raise ValueError("block 0 is reserved and never shared")
+        if b not in self._refs:
+            raise ValueError(f"incref of unallocated block {b}")
+        self._refs[b] += 1
+
+    def decref(self, b: int) -> bool:
+        """Drop one owner; returns True when the block went back to the free
+        list.  Decref of the trash block or a free block raises (the classic
+        double-free)."""
+        if b == 0:
+            raise ValueError("block 0 is reserved and never allocated")
+        n = self._refs.get(b, 0)
+        if n <= 0:
+            raise ValueError(f"double free / foreign block {b}")
+        if n == 1:
+            del self._refs[b]
+            self._free.append(b)
+            return True
+        self._refs[b] = n - 1
+        return False
+
     # -- alloc / free -------------------------------------------------------
 
     def alloc(self, n: int) -> List[int]:
-        """Pop ``n`` blocks from the free list; raises :class:`PoolExhausted`
-        (allocating nothing) when fewer than ``n`` are free."""
+        """Pop ``n`` blocks from the free list at refcount 1; raises
+        :class:`PoolExhausted` (allocating nothing) when fewer are free."""
         if n < 0:
             raise ValueError("cannot allocate a negative block count")
         if n > self.n_free:
@@ -79,22 +130,117 @@ class BlockAllocator:
                 f"need {n} blocks, {self.n_free}/{self.capacity} free"
             )
         ids = [self._free.pop() for _ in range(n)]
-        self._allocated.update(ids)
+        for b in ids:
+            self._refs[b] = 1
+        self.peak_in_use = max(self.peak_in_use, self.n_in_use)
         return ids
 
-    def free(self, ids: List[int]) -> None:
-        """Return blocks to the pool.  Double-free and freeing the trash
-        block are bookkeeping bugs and raise."""
+    def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per block (decref spelled like the old
+        all-or-nothing API).  Shared blocks survive until their last owner
+        lets go; double-free and freeing the trash block raise."""
         for b in ids:
-            if b == 0:
-                raise ValueError("block 0 is reserved and never allocated")
-            if b not in self._allocated:
-                raise ValueError(f"double free / foreign block {b}")
-            self._allocated.discard(b)
-            self._free.append(b)
+            self.decref(b)
+
+    def fork(self, b: int) -> int:
+        """Copy-on-write split: allocate a private block to replace shared
+        block ``b`` for one of its owners, transferring that owner's
+        reference.  The caller copies the device contents and repoints its
+        block table; ``b`` keeps its remaining owners."""
+        if not self.is_shared(b):
+            raise ValueError(f"fork of unshared block {b} (refcount {self.ref_count(b)})")
+        [new] = self.alloc(1)
+        self.decref(b)
+        return new
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
             f"BlockAllocator(n_blocks={self.n_blocks}, bs={self.block_size}, "
             f"free={self.n_free}/{self.capacity})"
         )
+
+
+class PrefixCache:
+    """Hash-chain prompt-prefix cache: full-block token prefixes → block ids.
+
+    Entry ``k`` of a prompt's chain is keyed by the tenant-family digest (a
+    content hash of the tenant's λ tree — K/V depends on the adapter, so
+    only tenants with *identical* λ may share K/V) plus the first
+    ``k·block_size`` prompt tokens.  ``match`` walks the chain and returns
+    the longest cached run of leading full blocks; ``insert`` files the
+    blocks a prefill just wrote.  The cache holds its own reference on every
+    cached block, so prefixes survive lane retirement and are reclaimed by
+    LRU eviction only under pool pressure.
+
+    Only *full* blocks are ever cached: the partial tail block of a prompt
+    keeps receiving decode writes and stays private to its lane.
+    """
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self.block_size = allocator.block_size
+        # key → block id, LRU order (least-recently-used first)
+        self._entries: "OrderedDict[bytes, int]" = OrderedDict()
+        self.hits = 0  # blocks reused across all matches
+        self.misses = 0  # full blocks prefilled that were not cached
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._entries)
+
+    def _chain(self, digest: bytes, tokens: np.ndarray):
+        """Yield one key per leading full block, vLLM-style chained hashing:
+        key_k = sha1(key_{k-1} ‖ tokens of block k), seeded by the family
+        digest — each key covers the whole prefix at O(block) cost, so a
+        full walk is O(len(tokens)) instead of O(len(tokens)²)."""
+        prev, bs = digest, self.block_size
+        for k in range(len(tokens) // bs):
+            h = hashlib.sha1(prev)
+            h.update(np.ascontiguousarray(tokens[k * bs:(k + 1) * bs], np.int32).tobytes())
+            prev = h.digest()
+            yield prev
+
+    def match(self, digest: bytes, tokens: np.ndarray) -> List[int]:
+        """Block ids of the longest cached leading-full-block chain of
+        ``tokens`` under tenant family ``digest`` (read-only: no refcount
+        change — the caller increfs the blocks it actually adopts)."""
+        out: List[int] = []
+        for key in self._chain(digest, tokens):
+            b = self._entries.get(key)
+            if b is None:
+                break
+            self._entries.move_to_end(key)
+            out.append(b)
+        return out
+
+    def insert(self, digest: bytes, tokens: np.ndarray, block_ids: Sequence[int]) -> None:
+        """File a prompt's leading full blocks (``block_ids[k]`` holds tokens
+        ``[k·bs, (k+1)·bs)``).  Already-cached chain links are left alone;
+        new links take a cache-owned reference."""
+        full = min(len(tokens) // self.block_size, len(block_ids))
+        for k, key in enumerate(self._chain(digest, tokens)):
+            if k >= full:
+                break
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            self.allocator.incref(block_ids[k])
+            self._entries[key] = block_ids[k]
+
+    def evict_one(self) -> bool:
+        """Drop the least-recently-used entry; returns True if a block was
+        actually returned to the pool (the cache was its last owner)."""
+        if not self._entries:
+            return False
+        _, b = self._entries.popitem(last=False)
+        return self.allocator.decref(b)
+
+    def clear(self) -> int:
+        """Drop every entry; returns the number of blocks freed to the pool."""
+        freed = 0
+        while self._entries:
+            freed += bool(self.evict_one())
+        return freed

@@ -20,16 +20,33 @@ down to the per-layer ``(n_slots, rank_cap)`` table consumed by
 """
 from __future__ import annotations
 
+import hashlib
 import math
 from collections import OrderedDict
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
 BASE_TENANT = "__base__"
+
+
+def _lam_digest(flat: Dict[Tuple[str, str], Any]) -> bytes:
+    """Content hash of a λ tree — the tenant-*family* identity.
+
+    Two tenants with bit-identical λ produce bit-identical K/V for the same
+    tokens, so they may share prompt-prefix KV blocks (serving/paging.py's
+    ``PrefixCache`` keys on this digest).  Tenants whose λ differ anywhere
+    get distinct digests and never share."""
+    h = hashlib.sha1()
+    for key in sorted(flat):
+        leaf = np.asarray(flat[key], np.float32)
+        h.update(repr((key, leaf.shape)).encode())
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    return h.digest()
 
 
 def extract_lambda(params: Pytree) -> Dict[str, Dict[str, jax.Array]]:
@@ -77,6 +94,14 @@ class AdapterRegistry:
         self._pins: Dict[str, int] = {BASE_TENANT: 1}
         self._free = list(range(n_slots - 1, 0, -1))
         self.version = 0  # bumped on any table mutation (engine cache key)
+        # tenant → λ content hash (the prefix-sharing family id); the base
+        # tenant's digest is that of the all-zeros tree, so explicit zero-λ
+        # tenants land in the same family.
+        self._digests: Dict[str, bytes] = {
+            BASE_TENANT: _lam_digest(
+                {key: np.zeros(shape, np.float32) for key, shape in lam_shapes.items()}
+            )
+        }
 
     # -- construction -------------------------------------------------------
 
@@ -128,6 +153,7 @@ class AdapterRegistry:
             if tenant == BASE_TENANT or self._pins.get(tenant, 0):
                 continue
             slot = self._slots.pop(tenant)
+            self._digests.pop(tenant, None)
             # scrub the slot so it is base-model-safe until overwritten
             for key in self.tables:
                 self.tables[key] = self.tables[key].at[slot].set(0.0)
@@ -173,8 +199,13 @@ class AdapterRegistry:
             )
         self._slots[tenant] = slot
         self._slots.move_to_end(tenant)
+        self._digests[tenant] = _lam_digest(flat)
         self.version += 1
         return slot
+
+    def digest(self, tenant: str) -> bytes:
+        """λ content hash of a resident tenant (prefix-sharing family id)."""
+        return self._digests[tenant]
 
     def evict(self, tenant: str) -> None:
         """Explicitly drop a tenant (must not be pinned)."""
@@ -183,6 +214,7 @@ class AdapterRegistry:
         if self._pins.get(tenant, 0):
             raise RuntimeError(f"tenant {tenant!r} is pinned by in-flight requests")
         slot = self._slots.pop(tenant)
+        self._digests.pop(tenant, None)
         for key in self.tables:
             self.tables[key] = self.tables[key].at[slot].set(0.0)
         self._free.append(slot)

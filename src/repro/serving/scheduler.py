@@ -28,6 +28,8 @@ class Request:
     # filled by the engine:
     lane: int = -1
     slot: int = -1  # adapter slot id (0 = base model)
+    admit_seq: int = -1  # admission ordinal (preemption picks the youngest)
+    preemptions: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
 
@@ -94,6 +96,20 @@ class ContinuousBatchScheduler:
         assert self.lanes[req.lane] is req
         self.lanes[req.lane] = None
         req.lane = -1
+
+    def preempt(self, req: Request) -> None:
+        """Kick an active request back to the *front* of the queue (FIFO
+        re-admission: it was admitted before anything still queued, so it
+        stays ahead of them).  Generated state is discarded — greedy decode
+        is deterministic, so re-running from the prompt reproduces it."""
+        assert self.lanes[req.lane] is req
+        self.lanes[req.lane] = None
+        req.lane = -1
+        req.admit_seq = -1
+        req.preemptions += 1
+        req.tokens.clear()
+        req.logits.clear()
+        self.queue.appendleft(req)
 
     @property
     def has_work(self) -> bool:

@@ -27,23 +27,9 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as shard_map  # version shim lives in compat
+
 _state = threading.local()
-
-
-def shard_map(f, *, mesh, in_specs, out_specs):
-    """`shard_map` across jax versions: the new top-level `jax.shard_map`
-    (replication checking via ``check_vma``) vs the older
-    `jax.experimental.shard_map.shard_map` (``check_rep``)."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
-        )
-    from jax.experimental.shard_map import shard_map as sm_old
-
-    return sm_old(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
-    )
 
 
 def _rules() -> Dict[str, Any]:

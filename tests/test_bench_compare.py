@@ -1,0 +1,92 @@
+"""The CI benchmark-trajectory gate (scripts/bench_compare.py): an injected
+>1.5x regression on a >100µs metric must fail; sub-threshold metrics and
+interpret-mode zeros must not."""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts" / "bench_compare.py",
+)
+bench_compare = importlib.util.module_from_spec(_SPEC)
+sys.modules["bench_compare"] = bench_compare  # dataclasses resolve via sys.modules
+_SPEC.loader.exec_module(bench_compare)
+
+
+BASELINE = {
+    "kernel:big": 1000.0,
+    "kernel:small": 50.0,
+    "kernel:interpret": 0.0,
+    "serve:gone": 400.0,
+}
+
+
+def _statuses(current, **kw):
+    deltas = bench_compare.compare(BASELINE, current, **kw)
+    return {d.name: d.status for d in deltas}
+
+
+def test_flat_run_passes():
+    st = _statuses({"kernel:big": 990.0, "kernel:small": 55.0,
+                    "kernel:interpret": 0.0, "serve:gone": 380.0})
+    assert st["kernel:big"] == st["kernel:small"] == st["serve:gone"] == "ok"
+    assert st["kernel:interpret"] == "ignored"
+
+
+def test_injected_regression_fails():
+    """The acceptance case: a doctored baseline showing a 2x slowdown on a
+    >100µs metric must fail the gate."""
+    st = _statuses({"kernel:big": 2000.0, "kernel:small": 50.0,
+                    "kernel:interpret": 0.0, "serve:gone": 400.0})
+    assert st["kernel:big"] == "fail"
+
+
+def test_small_metric_regression_only_warns():
+    st = _statuses({"kernel:big": 1000.0, "kernel:small": 200.0,
+                    "kernel:interpret": 0.0, "serve:gone": 400.0})
+    assert st["kernel:small"] == "warn"
+
+
+def test_interpret_zeros_and_membership_changes_never_fail():
+    st = _statuses({"kernel:big": 1000.0, "kernel:small": 50.0,
+                    "kernel:interpret": 123.0, "kernel:brand_new": 9.0})
+    assert st["kernel:interpret"] == "ignored"  # 0 → nonzero: no baseline signal
+    assert st["kernel:brand_new"] == "new"
+    assert st["serve:gone"] == "missing"
+
+
+def test_warn_only_downgrades_cross_machine_failures():
+    st = _statuses({"kernel:big": 5000.0, "kernel:small": 50.0,
+                    "kernel:interpret": 0.0, "serve:gone": 400.0}, warn_only=True)
+    assert st["kernel:big"] == "warn"
+
+
+def test_cli_exit_codes_and_summary(tmp_path):
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    summary = tmp_path / "summary.md"
+    base.write_text(json.dumps({"scale": "smoke", "us_per_call": BASELINE}))
+
+    curr.write_text(json.dumps({"scale": "smoke", "us_per_call": BASELINE}))
+    assert bench_compare.main([str(base), str(curr), "--summary", str(summary)]) == 0
+
+    doctored = dict(BASELINE, **{"kernel:big": 1600.0})  # 1.6x > 1.5x
+    curr.write_text(json.dumps({"scale": "smoke", "us_per_call": doctored}))
+    assert bench_compare.main([str(base), str(curr), "--summary", str(summary)]) == 1
+    assert bench_compare.main(
+        [str(base), str(curr), "--summary", str(summary), "--warn-only"]
+    ) == 0
+    assert bench_compare.main(
+        [str(base), str(curr), "--summary", str(summary), "--max-ratio", "2.0"]
+    ) == 0
+    text = summary.read_text()
+    assert "Benchmark trajectory" in text and "kernel:big" in text
+
+
+def test_cli_rejects_missing_files(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        bench_compare.main([str(tmp_path / "nope.json"), str(tmp_path / "nope.json")])
