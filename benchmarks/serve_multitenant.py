@@ -5,10 +5,12 @@ Measures the continuous-batching engine at increasing tenant heterogeneity
 the batched multi-λ gather vs the plain single-adapter matmul, the
 per-tenant device-state accounting that motivates λ-only serving, the
 paged-vs-dense KV cache HBM footprint under short-prompt traffic (the
-regime where a dense ``(lanes, max_len)`` region is nearly all slack), and
-the copy-on-write prefix-sharing block footprint when N tenants of one
+regime where a dense ``(lanes, max_len)`` region is nearly all slack), the
+copy-on-write prefix-sharing block footprint when N tenants of one
 family serve a common prompt (the regime the QR-LoRA pitch targets: tenants
-differ by ~600 λ scalars, their system preamble dominates KV HBM).
+differ by ~600 λ scalars, their system preamble dominates KV HBM), and the
+recurrent-family decode paths (xlstm-only and jamba hybrid batches) that
+join the shared loop through the LaneState protocol.
 """
 from __future__ import annotations
 
@@ -25,30 +27,68 @@ from repro.serving import BASE_TENANT, MultiTenantEngine, random_lambda
 
 
 def bench_engine_throughput():
-    arch = "smollm-135m"
-    cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
     lanes, gen, prompt_len, max_len = (8, 16, 16, 64) if SCALE != "paper" else (16, 64, 64, 256)
-    rng = np.random.default_rng(0)
     for n_tenants in (1, 4, lanes):
-        eng = MultiTenantEngine(
-            cfg, n_lanes=lanes, n_slots=max(8, n_tenants + 1), max_len=max_len
+        eng, dt = _drive_engine(
+            "smollm-135m", n_tenants=n_tenants, lanes=lanes,
+            prompt_len=prompt_len, gen=gen, max_len=max_len,
         )
-        tenants = [BASE_TENANT]
-        for i in range(1, n_tenants):
-            t = f"t{i}"
-            eng.add_tenant(t, random_lambda(jax.random.PRNGKey(i), eng.params, 0.1))
-            tenants.append(t)
-        for lane in range(lanes):
-            prompt = rng.integers(2, cfg.vocab_size, size=prompt_len).astype(np.int32)
-            eng.submit(tenants[lane % n_tenants], prompt, gen)
-        t0 = time.time()
-        eng.run()
-        dt = time.time() - t0
         emit(
             f"serve_multitenant:engine:tenants={n_tenants}",
             dt / max(eng.steps, 1) * 1e6,
             f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes};"
             f"bytes_per_tenant={eng.registry.bytes_per_tenant()}",
+        )
+
+
+def _drive_engine(arch, *, n_tenants, lanes, prompt_len, gen, max_len, **engine_kw):
+    """Shared harness: build an engine, register ``n_tenants`` distinct-λ
+    tenants (tenant 0 = base), submit one request per lane round-robin over
+    the tenants, and drain.  Returns (engine, wall-clock seconds)."""
+    cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
+    eng = MultiTenantEngine(
+        cfg, n_lanes=lanes, n_slots=max(8, n_tenants + 1), max_len=max_len,
+        **engine_kw,
+    )
+    tenants = [BASE_TENANT]
+    for i in range(1, n_tenants):
+        t = f"t{i}"
+        eng.add_tenant(t, random_lambda(jax.random.PRNGKey(i), eng.params, 0.1))
+        tenants.append(t)
+    rng = np.random.default_rng(0)
+    for lane in range(lanes):
+        prompt = rng.integers(2, cfg.vocab_size, size=prompt_len).astype(np.int32)
+        eng.submit(tenants[lane % len(tenants)], prompt, gen)
+    t0 = time.time()
+    eng.run()
+    return eng, time.time() - t0
+
+
+def bench_recurrent_families():
+    """LaneState serving throughput for the non-attention families: an
+    xlstm-only batch (pure recurrent lanes, O(1) per-lane state — no KV
+    region at all) and a jamba hybrid batch (paged attention KV next to
+    dense Mamba state in one ``step()``).  Tracked in BENCH_smoke.json so
+    the recurrent decode path sits under the same trajectory gate as the
+    attention families."""
+    cases = (
+        ("xlstm-125m", "ssm", {}),
+        ("jamba-1.5-large-398b", "hybrid", dict(paged=True, block_size=8)),
+    )
+    lanes, gen, prompt_len, max_len = (4, 8, 9, 32) if SCALE != "paper" else (8, 32, 32, 128)
+    for arch, fam, kw in cases:
+        eng, dt = _drive_engine(
+            arch, n_tenants=lanes, lanes=lanes, prompt_len=prompt_len,
+            gen=gen, max_len=max_len, **kw,
+        )
+        extra = ""
+        if eng.paged:
+            extra = f";pool_peak={eng.allocator.peak_in_use}/{eng.allocator.capacity}"
+        emit(
+            f"serve_multitenant:engine:family={fam}",
+            dt / max(eng.steps, 1) * 1e6,
+            f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes};"
+            f"state_bytes={eng.kv_cache_bytes()}{extra}",
         )
 
 
@@ -197,6 +237,7 @@ def bench_prefix_sharing():
 def main():
     bench_bgmv_overhead()
     bench_engine_throughput()
+    bench_recurrent_families()
     bench_paged_vs_dense()
     bench_prefix_sharing()
 

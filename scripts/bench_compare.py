@@ -18,20 +18,34 @@ Per-metric policy (values are µs/call, written by ``benchmarks.common``):
   came from a different machine (e.g. the checked-in snapshot on a cache
   miss), where absolute ratios are not comparable.
 
+Multi-run drift (``--history BENCH_history.json``): the single-run gate
+only sees one step, so a hot path can creep +20% per run forever without
+tripping 1.5x.  With ``--history``, the script keeps a small ring buffer of
+the last ``--history-keep`` (default 10) runs' timings and **warns** when a
+metric has increased monotonically across the trailing ``--drift-window``
+(default 4) runs by more than ``--drift-ratio`` (default 1.15x) in total —
+visible drift below the hard gate.  The current run is appended and the
+trimmed buffer written back; in CI the file lives next to the cached
+baseline, so a failing gate (job exits before the cache save) never
+advances the history either.
+
 Writes a GitHub-flavored markdown table to ``--summary`` (default stdout;
 point it at ``$GITHUB_STEP_SUMMARY`` in CI) and exits 1 on any failure.
 
 Usage:
     python scripts/bench_compare.py BASELINE.json CURRENT.json \\
-        [--max-ratio 1.5] [--min-us 100] [--summary FILE] [--warn-only]
+        [--max-ratio 1.5] [--min-us 100] [--summary FILE] [--warn-only] \\
+        [--history BENCH_history.json] [--history-keep 10] \\
+        [--drift-window 4] [--drift-ratio 1.15]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import sys
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -97,6 +111,74 @@ def compare(
     return deltas
 
 
+# ---------------------------------------------------------------------------
+# Multi-run drift: ring-buffer history + monotonic-trend warning
+# ---------------------------------------------------------------------------
+
+
+def load_history(path: str) -> List[Dict[str, float]]:
+    """The ring buffer: a list of past runs' timing dicts, oldest first."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    runs = data.get("runs", []) if isinstance(data, dict) else []
+    return [{str(k): float(v) for k, v in r.items()} for r in runs]
+
+
+def save_history(path: str, runs: List[Dict[str, float]], keep: int = 10) -> None:
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"runs": runs[-keep:]}, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def detect_drift(
+    history: List[Dict[str, float]],
+    current: Dict[str, float],
+    *,
+    window: int = 4,
+    drift_ratio: float = 1.15,
+    min_us: float = 100.0,
+) -> Dict[str, Tuple[int, float]]:
+    """Metrics whose timings rose monotonically over the trailing ``window``
+    runs (history + current) by > ``drift_ratio`` total — the slow creep a
+    single-run gate can't see.  Returns name → (runs in trend, total ratio).
+    Metrics whose trend starts at or below ``min_us`` are jitter-dominated
+    and skipped, as is anything with a 0.0 (interpret-mode) sample."""
+    if window < 3:
+        # 2 points make a step, not a trend — and the slice below would
+        # quietly scan the whole history for window <= 1
+        raise ValueError(f"drift window must span >= 3 runs (got {window})")
+    out: Dict[str, Tuple[int, float]] = {}
+    runs = history[-(window - 1):] + [current]
+    if len(runs) < window:  # a trend must span the full window
+        return out
+    for name, cur in current.items():
+        series = [r.get(name) for r in runs]
+        if any(v is None or v == 0.0 for v in series):
+            continue
+        if series[0] <= min_us:
+            continue
+        if all(b > a for a, b in zip(series, series[1:])):
+            total = series[-1] / series[0]
+            if total > drift_ratio:
+                out[name] = (len(series), total)
+    return out
+
+
+def apply_drift(deltas: List[Delta], drift: Dict[str, Tuple[int, float]]) -> None:
+    """Downgrade 'ok' deltas that are silently drifting to 'warn' (drift
+    never *fails* — the hard gate owns that; it makes creep visible)."""
+    for d in deltas:
+        hit = drift.get(d.name)
+        if hit and d.status == "ok":
+            n, total = hit
+            d.status = "warn"
+            d.note = f"monotonic drift: {total:.2f}x over last {n} runs"
+
+
 _ICON = {"ok": "✅", "warn": "⚠️", "fail": "❌", "ignored": "➖", "new": "🆕", "missing": "❓"}
 
 
@@ -136,12 +218,35 @@ def main(argv=None) -> int:
                     "(e.g. $GITHUB_STEP_SUMMARY); default: stdout")
     ap.add_argument("--warn-only", action="store_true",
                     help="downgrade failures to warnings (cross-machine baseline)")
+    ap.add_argument("--history", default=None,
+                    help="ring-buffer history file (BENCH_history.json): warn "
+                    "on monotonic multi-run drift below the hard gate, then "
+                    "append this run and trim to --history-keep entries")
+    ap.add_argument("--history-keep", type=int, default=10,
+                    help="runs kept in the history ring buffer (default 10)")
+    ap.add_argument("--drift-window", type=int, default=4,
+                    help="trailing runs a monotonic trend must span (default 4)")
+    ap.add_argument("--drift-ratio", type=float, default=1.15,
+                    help="total slowdown over the window that warns (default 1.15)")
     args = ap.parse_args(argv)
+    if args.history and args.drift_window < 3:
+        ap.error(f"--drift-window must be >= 3 runs (got {args.drift_window})")
 
+    current = load_timings(args.current)
     deltas = compare(
-        load_timings(args.baseline), load_timings(args.current),
+        load_timings(args.baseline), current,
         max_ratio=args.max_ratio, min_us=args.min_us, warn_only=args.warn_only,
     )
+    if args.history:
+        runs = load_history(args.history)
+        apply_drift(
+            deltas,
+            detect_drift(
+                runs, current, window=args.drift_window,
+                drift_ratio=args.drift_ratio, min_us=args.min_us,
+            ),
+        )
+        save_history(args.history, runs + [current], keep=args.history_keep)
     md = render_markdown(deltas, max_ratio=args.max_ratio, min_us=args.min_us)
     if args.summary:
         with open(args.summary, "a") as f:

@@ -8,7 +8,18 @@ output is re-derived through the classic single-adapter deployment
 (λ merged into the weights, launch/serve.py-style) and compared
 token-for-token and logit-for-logit.
 
+Every decode-capable family serves through the same loop (LaneState
+protocol): ``--arch smollm-135m`` (dense attention), ``--arch
+jamba-1.5-large-398b`` (hybrid: paged attention + dense Mamba state with
+``--paged``), ``--arch xlstm-125m`` (pure recurrent; no KV to page, so
+``--paged`` is rejected).  Family-specific knobs: ``--paged`` /
+``--share-prefix`` / ``--watermark`` need attention layers; ``--quantum``
+(time-slice fairness via lane-state snapshots) needs the dense layout and
+shines for recurrent families whose per-lane state is O(1).
+
     PYTHONPATH=src python -m repro.launch.serve_multi --reduced --tenants 4
+    PYTHONPATH=src python -m repro.launch.serve_multi --reduced \\
+        --arch xlstm-125m --stream --quantum 4
 """
 from __future__ import annotations
 
@@ -61,6 +72,17 @@ def main(argv=None):
         "headroom (reduces mid-decode preemptions)",
     )
     ap.add_argument(
+        "--quantum", type=int, default=None,
+        help="time-slice fairness: snapshot-preempt a lane after this many "
+        "decode steps while requests queue (dense layout only; exact "
+        "restore, no recompute)",
+    )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="print tokens as they decode (engine.stream() events) instead "
+        "of per-tenant lines at retirement",
+    )
+    ap.add_argument(
         "--dtype", default="float32",
         help="float32 default: the verification compares fused-multi-λ vs "
         "merged-weight logits, which only makes sense at full precision",
@@ -70,6 +92,14 @@ def main(argv=None):
 
     cfg = (get_reduced if args.reduced else get_config)(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
+    if args.paged and cfg.family == "ssm":
+        ap.error(
+            f"--paged: family {cfg.family!r} ({cfg.name}) has no attention "
+            "layers to page — its per-lane state is already O(1); drop "
+            "--paged (and consider --quantum for fairness)"
+        )
+    if args.quantum is not None and args.paged:
+        ap.error("--quantum needs the dense layout; drop --paged")
     # the driver submits for every tenant it registers, so its pool must
     # hold them all at once (LRU eviction is exercised in tests/test_serving)
     n_slots = max(args.slots, args.tenants + 1)
@@ -87,7 +117,9 @@ def main(argv=None):
         n_blocks=args.n_blocks,
         share_prefix=args.share_prefix,
         watermark=args.watermark,
+        quantum=args.quantum,
     )
+    print(f"[serve_multi] family={cfg.family} layout={'paged' if args.paged else 'dense'}")
     if args.paged:
         print(
             f"[serve_multi] paged KV: block_size={args.block_size} "
@@ -110,20 +142,32 @@ def main(argv=None):
     )
 
     rng = np.random.default_rng(args.seed)
-    reqs = {}
+    reqs = {}  # uid → Request (carries .tenant and .prompt)
     for tenant in lams:
         prompt = rng.integers(2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
         r = engine.submit(tenant, prompt, args.gen_len)
-        reqs[r.uid] = (tenant, prompt)
+        reqs[r.uid] = r
 
     t0 = time.time()
-    done = engine.run()
+    if args.stream:
+        # streaming token delivery: each event prints the moment its shared
+        # decode step finishes, not when its request retires
+        for ev in engine.stream():
+            print(f"[stream] step={engine.steps:<4d} {ev.tenant:<10s} "
+                  f"lane={ev.lane} tok[{ev.index}]={ev.token}"
+                  + ("  <done>" if ev.done else ""))
+        done = dict(reqs)  # stream() drained the queue
+    else:
+        done = engine.run()
     dt = time.time() - t0
     print(
         f"[serve_multi] {engine.decoded_tokens} tokens in {dt*1e3:.1f} ms "
         f"({engine.decoded_tokens/dt:.0f} tok/s) over {engine.steps} shared "
         "decode steps"
     )
+    if args.quantum is not None:
+        print(f"[serve_multi] quantum={args.quantum}: "
+              f"{engine.slice_preemptions} snapshot time-slices")
     if args.paged:
         msg = (
             f"[serve_multi] pool peak={engine.allocator.peak_in_use}/"
@@ -138,17 +182,16 @@ def main(argv=None):
             )
         print(msg)
     for uid in sorted(done):
-        tenant, _ = reqs[uid]
-        print(f"[serve_multi] {tenant}: {done[uid].tokens[:12]}")
+        print(f"[serve_multi] {done[uid].tenant}: {done[uid].tokens[:12]}")
 
     if args.no_verify:
         return done
 
     worst = 0.0
     for uid, req in done.items():
-        tenant, prompt = reqs[uid]
+        tenant = req.tenant
         ref_toks, ref_logits = reference_decode(
-            cfg, engine.params, lams[tenant], prompt, args.gen_len, args.max_len
+            cfg, engine.params, lams[tenant], req.prompt, args.gen_len, args.max_len
         )
         err = float(np.abs(np.stack(req.logits) - ref_logits).max())
         worst = max(worst, err)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.adapter_api import adapted_matmul
+from repro.models.lane_state import NO_LANE
 from repro.models.layers import apply_rope, dense_init, rms_norm, stacked_dense_init
 from repro.sharding import shard
 
@@ -325,3 +326,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_attn_layers: int, d
         "v": jnp.zeros((n_attn_layers, batch, max_len, KV, dh), dtype),
         "idx": jnp.zeros((n_attn_layers,), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# LaneState protocol (models/lane_state.py): which axis carries the lane dim
+# ---------------------------------------------------------------------------
+
+
+def kv_lane_axes(lead_ndim: int):
+    """Lane-axes tree for a dense per-lane KV cache built with
+    ``lead_ndim`` stacked leading axes (``transformer.init_decode_state``'s
+    ``kv(n_lead)``): k/v are ``(*lead, batch, max_len, KV, dh)`` and idx is
+    ``(*lead, batch)`` — the lane axis follows the lead axes."""
+    return {"k": lead_ndim, "v": lead_ndim, "idx": lead_ndim}
+
+
+def paged_kv_lane_axes():
+    """Lane-axes tree for the paged KV cache: the k/v block pools are
+    global (lanes address them through their block-table rows), so only
+    ``block_tbl`` ``(G, batch, max_blocks)`` and ``idx`` ``(G, batch)``
+    carry a lane dimension."""
+    return {"k": NO_LANE, "v": NO_LANE, "block_tbl": 1, "idx": 1}

@@ -53,8 +53,20 @@ def init_mamba_params(key, cfg: ModelConfig, n: int, dtype) -> Dict:
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None):
-    """Depthwise causal conv. x (B,S,di), w (di,dc). prev (B,dc-1,di) state."""
+def _causal_conv(
+    x: jax.Array,
+    w: jax.Array,
+    prev: Optional[jax.Array] = None,
+    length: Optional[jax.Array] = None,
+):
+    """Depthwise causal conv. x (B,S,di), w (di,dc). prev (B,dc-1,di) state.
+
+    ``length`` (B,) int32 marks the true sequence length when ``x`` is
+    right-padded to a prefill bucket: the conv *outputs* at valid positions
+    are untouched by the padding (causality), but the carried state must be
+    the last ``dc-1`` inputs *before* the padding, not the padding itself —
+    gathered per row at positions ``[length-dc+1, length)``.
+    """
     B, S, di = x.shape
     dc = w.shape[-1]
     if prev is None:
@@ -63,7 +75,15 @@ def _causal_conv(x: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None):
     out = jnp.zeros((B, S, di), jnp.float32)
     for j in range(dc):
         out = out + xp[:, j : j + S, :].astype(jnp.float32) * w[:, j].astype(jnp.float32)
-    new_prev = xp[:, -(dc - 1) :, :] if dc > 1 else prev
+    if dc <= 1:
+        new_prev = prev
+    elif length is None:
+        new_prev = xp[:, -(dc - 1) :, :]
+    else:
+        # xp position j holds input position j-(dc-1); the state is input
+        # positions [length-dc+1, length) → xp positions length+[0, dc-1)
+        idx = length[:, None] + jnp.arange(dc - 1)[None, :]  # (B, dc-1)
+        new_prev = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out.astype(x.dtype), new_prev
 
 
@@ -113,8 +133,15 @@ def mamba_mixer(
     cfg: ModelConfig,
     state: Optional[Dict] = None,
     adp: Optional[Dict] = None,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """x (B,S,d) → (y (B,S,d), new_state).  state: {"conv","h"} for decode."""
+    """x (B,S,d) → (y (B,S,d), new_state).  state: {"conv","h"} for decode.
+
+    ``length`` (B,) int32: true prompt lengths for bucketed (right-padded)
+    prefill — padded positions are masked out of the recurrent state (their
+    dt is zeroed, making the scan step an exact identity) and out of the
+    conv carry, so the materialized state matches an unpadded prefill.
+    """
     from repro.core.adapter_api import adapted_matmul
 
     B, S, d = x.shape
@@ -125,7 +152,10 @@ def mamba_mixer(
     u = adapted_matmul(x, p["m_in"], (adp or {}).get("mamba_in"))  # (B,S,di)
     z = x @ p["m_gate"]
     u = shard(u, "batch", None, "ff")
-    xc, new_conv = _causal_conv(u, p["m_conv"], state["conv"] if decode else None)
+    xc, new_conv = _causal_conv(
+        u, p["m_conv"], state["conv"] if decode else None,
+        length=None if decode else length,
+    )
     xc = jax.nn.silu(xc)
 
     proj = xc @ p["m_xproj"]  # (B,S,dr+2N)
@@ -145,6 +175,11 @@ def mamba_mixer(
         y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0].astype(jnp.float32))[:, None]
         new_state = {"conv": new_conv, "h": h}
     else:
+        if length is not None:
+            # dt = 0 at padded positions → exp(dt·A) = 1 and dt·x·B = 0: the
+            # scan step is the identity, so h_last is the state at `length`.
+            valid = jnp.arange(S)[None, :] < length[:, None]  # (B, S)
+            dt = jnp.where(valid[..., None], dt, 0.0)
         h0 = jnp.zeros((B, dt.shape[2], N), jnp.float32)
         y, h_last = _ssm_scan_chunked(
             dt, xc.astype(jnp.float32), Bs.astype(jnp.float32),
@@ -164,3 +199,9 @@ def init_mamba_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
         "conv": jnp.zeros((*n, batch, cfg.mamba_d_conv - 1, di), dtype),
         "h": jnp.zeros((*n, batch, di, cfg.mamba_d_state), jnp.float32),
     }
+
+
+def state_lane_axes(lead_ndim: int):
+    """LaneState protocol: the batch/lane axis of ``init_mamba_state``'s
+    leaves sits after the ``lead_ndim`` stacked leading axes."""
+    return {"conv": lead_ndim, "h": lead_ndim}

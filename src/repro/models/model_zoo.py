@@ -148,11 +148,18 @@ class Model:
             block_size=block_size, n_blocks=n_blocks,
         )
 
+    def lane_axes(self, paged: bool = False):
+        """LaneState protocol: the lane-axis tree of ``init_decode_state``'s
+        per-lane cache (see ``repro.models.lane_state``)."""
+        return tfm_lib.decode_state_lane_axes(self.cfg, paged=paged)
+
     def paged_prefill_view(self, cache, write_ids):
-        return tfm_lib.paged_prefill_view(cache, write_ids)
+        return tfm_lib.paged_prefill_view(self.cfg, cache, write_ids)
 
     def commit_paged_prefill(self, cache, filled, lane, table_row, length):
-        return tfm_lib.commit_paged_prefill(cache, filled, lane, table_row, length)
+        return tfm_lib.commit_paged_prefill(
+            self.cfg, cache, filled, lane, table_row, length
+        )
 
     def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None,
                 seg_ids=None, length=None):

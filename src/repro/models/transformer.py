@@ -172,7 +172,8 @@ def _ckpt(fn, train: bool):
 
 
 def _group_body(
-    cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False, seg_ids=None
+    cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False, seg_ids=None,
+    length=None,
 ):
     fam = cfg.family
     adapters = p.get("adapters")
@@ -218,7 +219,8 @@ def _group_body(
                 st = _tslice(cache_sl["mamba"], mi) if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, mp=mp, st=st: mamba_lib.mamba_mixer(
-                        mp, h, cfg, state=st, adp=_adp_for(adapters, "mamba", seg_ids)
+                        mp, h, cfg, state=st, adp=_adp_for(adapters, "mamba", seg_ids),
+                        length=length,
                     ),
                     train,
                 )(h)
@@ -257,7 +259,8 @@ def _group_body(
                 st = cache_sl.get("mlstm") if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, st=st: xlstm_lib.mlstm_mixer(
-                        p["mlstm"], h, cfg, state=st, adp=_adp_for(adapters, "mlstm", seg_ids)
+                        p["mlstm"], h, cfg, state=st, adp=_adp_for(adapters, "mlstm", seg_ids),
+                        length=length,
                     ),
                     train,
                 )(h)
@@ -267,7 +270,8 @@ def _group_body(
                 st = cache_sl.get("slstm") if cache_sl else None
                 out, ns = _ckpt(
                     lambda h, st=st: xlstm_lib.slstm_mixer(
-                        p["slstm"], h, cfg, state=st, adp=_adp_for(adapters, "slstm", seg_ids)
+                        p["slstm"], h, cfg, state=st, adp=_adp_for(adapters, "slstm", seg_ids),
+                        length=length,
                     ),
                     train,
                 )(h)
@@ -327,7 +331,10 @@ def _embed_input(params, cfg, tokens, embeds):
     return shard(x, "batch", None, None)
 
 
-def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, train, seg_ids=None):
+def _run_groups(
+    params, cfg: ModelConfig, x, positions, cache, img, decode, train, seg_ids=None,
+    length=None,
+):
     groups = params["groups"]
 
     def body(carry, xs):
@@ -335,7 +342,7 @@ def _run_groups(params, cfg: ModelConfig, x, positions, cache, img, decode, trai
         p, cache_sl = xs
         x, new_c, a = _group_body(
             cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat,
-            seg_ids=seg_ids,
+            seg_ids=seg_ids, length=length,
         )
         return (x, aux + a), new_c
 
@@ -381,6 +388,30 @@ def decoder_apply(
     return shard(logits, "batch", None, "vocab"), aux
 
 
+#: Families whose decode cache contains paged-able attention layers.
+PAGED_FAMILIES = ("dense", "audio", "moe", "hybrid")
+
+
+def _recurrent_layer_states(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Pytree]:
+    """The recurrent (non-attention) per-layer decode states of a family —
+    Mamba ``{conv, h}`` for hybrid, mLSTM/sLSTM states for ssm.  These are
+    O(1) per lane (no ``max_len`` axis) and identical in the dense,
+    per-lane, and paged cache layouts."""
+    G = cfg.n_layers // cfg.group_size
+    fam = cfg.family
+    layers: Dict[str, Pytree] = {}
+    if fam == "hybrid":
+        layers["mamba"] = mamba_lib.init_mamba_state(
+            cfg, batch, (G, cfg.hybrid_period - 1), dtype
+        )
+    elif fam == "ssm":
+        if "m" in cfg.xlstm_pattern:
+            layers["mlstm"] = xlstm_lib.init_mlstm_state(cfg, batch, (G,), dtype)
+        if "s" in cfg.xlstm_pattern:
+            layers["slstm"] = xlstm_lib.init_slstm_state(cfg, batch, (G,), dtype)
+    return layers
+
+
 def init_decode_state(
     cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, per_lane: bool = False,
     paged: bool = False, block_size: int = 16, n_blocks: Optional[int] = None,
@@ -389,25 +420,29 @@ def init_decode_state(
     offset (``idx (…, batch)``) and position (``pos (batch,)``) so lanes can
     hold sequences of different lengths — the continuous-batching layout
     used by ``repro.serving``.  Default keeps the scalar lock-step layout.
+    Every family builds a composite per-layer LaneState tree (attention KV
+    next to Mamba/xLSTM recurrent state for hybrid/ssm); the lane axis of
+    each leaf is declared by :func:`decode_state_lane_axes`, which the
+    serving engine uses for lane splice / snapshot / reset
+    (``models/lane_state.py``).
 
     ``paged=True`` (implies per-lane) swaps the dense ``(batch, max_len)``
     KV region for a global block pool ``(n_blocks, block_size, KV, dh)``
     per layer plus per-lane block tables ``(batch, max_len/block_size)``
     int32 — block 0 is the reserved trash block (see serving/paging.py).
     HBM then scales with actual resident tokens, not ``batch × max_len``.
+    Hybrid pages its attention layers while the Mamba layers keep dense
+    per-lane recurrent state in the same cache; a pure-ssm family has no
+    attention layers to page and rejects ``paged=True``.
     """
     G = cfg.n_layers // cfg.group_size
     fam = cfg.family
-    if per_lane and fam in ("hybrid", "ssm"):
-        raise NotImplementedError(
-            "per-lane decode state is attention-cache only (recurrent-state "
-            "lane management is a ROADMAP open item)"
-        )
     if paged:
-        if fam not in ("dense", "audio", "moe"):
+        if fam not in PAGED_FAMILIES:
             raise NotImplementedError(
-                "paged KV cache covers the plain-attention families "
-                "(dense/audio/moe)"
+                f"paged KV cache needs attention layers; family {fam!r} "
+                "has none to page (its per-lane state is already O(1) — "
+                "use per_lane=True)"
             )
         if max_len % block_size:
             raise ValueError(
@@ -429,7 +464,8 @@ def init_decode_state(
                 "v": jnp.zeros((G, n_blocks, block_size, KV, dh), dtype),
                 "block_tbl": jnp.zeros((G, batch, max_blocks), jnp.int32),
                 "idx": jnp.zeros((G, batch), jnp.int32),
-            }
+            },
+            **_recurrent_layer_states(cfg, batch, dtype),
         }
         return cache
 
@@ -441,36 +477,53 @@ def init_decode_state(
             "idx": jnp.zeros(idx_shape, jnp.int32),
         }
 
-    if fam in ("dense", "audio", "moe"):
-        cache["layers"] = {"attn": kv((G,))}
-    elif fam == "hybrid":
-        cache["layers"] = {
-            "attn": kv((G,)),
-            "mamba": mamba_lib.init_mamba_state(
-                cfg, batch, (G, cfg.hybrid_period - 1), dtype
-            ),
-        }
-    elif fam == "ssm":
-        layers = {}
-        if "m" in cfg.xlstm_pattern:
-            layers["mlstm"] = xlstm_lib.init_mlstm_state(cfg, batch, (G,), dtype)
-        if "s" in cfg.xlstm_pattern:
-            layers["slstm"] = xlstm_lib.init_slstm_state(cfg, batch, (G,), dtype)
-        cache["layers"] = layers
+    layers = _recurrent_layer_states(cfg, batch, dtype)
+    if fam in ("dense", "audio", "moe", "hybrid"):
+        layers["attn"] = kv((G,))
     elif fam == "vlm":
-        cache["layers"] = {"attn": kv((G, cfg.cross_attn_every - 1))}
+        layers["attn"] = kv((G, cfg.cross_attn_every - 1))
+    cache["layers"] = layers
     return cache
 
 
-def paged_prefill_view(cache, write_ids):
+def decode_state_lane_axes(cfg: ModelConfig, paged: bool = False) -> Dict[str, Pytree]:
+    """LaneState protocol: a tree with the structure of
+    ``init_decode_state(..., per_lane=True, paged=paged)`` whose leaves are
+    the axis carrying the lane dimension (``lane_state.NO_LANE`` for global
+    leaves such as the paged block pools).  Composed from each state
+    implementation's own declaration, exactly mirroring how
+    ``init_decode_state`` composes their initializers."""
+    fam = cfg.family
+    layers: Dict[str, Pytree] = {}
+    if fam == "hybrid":
+        layers["mamba"] = mamba_lib.state_lane_axes(2)  # (G, period-1, batch, …)
+    elif fam == "ssm":
+        if "m" in cfg.xlstm_pattern:
+            layers["mlstm"] = xlstm_lib.mlstm_state_lane_axes(1)  # (G, batch, …)
+        if "s" in cfg.xlstm_pattern:
+            layers["slstm"] = xlstm_lib.slstm_state_lane_axes(1)
+    if paged:
+        if fam not in PAGED_FAMILIES:
+            raise NotImplementedError(f"family {fam!r} has no attention layers to page")
+        layers["attn"] = attn_lib.paged_kv_lane_axes()
+    elif fam in ("dense", "audio", "moe", "hybrid"):
+        layers["attn"] = attn_lib.kv_lane_axes(1)  # (G, batch, …)
+    elif fam == "vlm":
+        layers["attn"] = attn_lib.kv_lane_axes(2)  # (G, P-1, batch, …)
+    return {"pos": 0, "layers": layers}
+
+
+def paged_prefill_view(cfg: ModelConfig, cache, write_ids):
     """1-lane paged-cache view for block-aligned admission prefill.
 
     Aliases the full engine cache's pools; the single block-table row is
     ``write_ids`` (ceil(bucket/block_size),) — this prompt's *write targets*
     per block, with trash block 0 standing in for already-resident shared
-    prefix blocks and bucket padding.  ``decoder_prefill`` on this view
-    scatters the prompt's K/V straight into the pool (attention.py's
-    ``_paged_prefill``); ``commit_paged_prefill`` folds the result back."""
+    prefix blocks and bucket padding.  Recurrent layers (hybrid's Mamba)
+    get a fresh 1-lane state — prefill materializes the prompt's recurrent
+    state into it.  ``decoder_prefill`` on this view scatters the prompt's
+    K/V straight into the pool (attention.py's ``_paged_prefill``);
+    ``commit_paged_prefill`` folds the result back."""
     a = cache["layers"]["attn"]
     G = a["idx"].shape[0]
     nb = write_ids.shape[0]
@@ -484,16 +537,20 @@ def paged_prefill_view(cache, write_ids):
                     write_ids.astype(jnp.int32)[None, None, :], (G, 1, nb)
                 ),
                 "idx": jnp.zeros((G, 1), jnp.int32),
-            }
+            },
+            **_recurrent_layer_states(cfg, 1, a["k"].dtype),
         },
     }
 
 
-def commit_paged_prefill(cache, filled, lane, table_row, length):
+def commit_paged_prefill(cfg: ModelConfig, cache, filled, lane, table_row, length):
     """Adopt a block-aligned prefill into the engine cache: take the updated
     pools from the prefill view, point ``lane``'s block-table row at its
-    blocks (``table_row`` (max_blocks,), tail entries → trash block 0), and
-    set its offsets to the true prompt ``length``."""
+    blocks (``table_row`` (max_blocks,), tail entries → trash block 0), set
+    its offsets to the true prompt ``length``, and splice any recurrent
+    layer states (hybrid's Mamba) from the 1-lane view into the lane."""
+    from repro.models import lane_state
+
     a, f = cache["layers"]["attn"], filled["layers"]["attn"]
     G, _, mb = a["block_tbl"].shape
     length = jnp.asarray(length, jnp.int32).reshape(1)
@@ -506,8 +563,15 @@ def commit_paged_prefill(cache, filled, lane, table_row, length):
     idx = jax.lax.dynamic_update_slice(
         a["idx"], jnp.broadcast_to(length, (G, 1)), (0, lane)
     )
-    attn = {"k": f["k"], "v": f["v"], "block_tbl": tbl, "idx": idx}
-    return {"pos": pos, "layers": {"attn": attn}}
+    layers = {"attn": {"k": f["k"], "v": f["v"], "block_tbl": tbl, "idx": idx}}
+    axes = decode_state_lane_axes(cfg, paged=True)["layers"]
+    for key in cache["layers"]:
+        if key == "attn":
+            continue
+        layers[key] = lane_state.restore_lane(
+            cache["layers"][key], axes[key], lane, filled["layers"][key]
+        )
+    return {"pos": pos, "layers": layers}
 
 
 def decoder_prefill(
@@ -530,9 +594,10 @@ def decoder_prefill(
     img = None
     if cfg.family == "vlm":
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
+    len_arr = None if length is None else jnp.asarray(length, jnp.int32)
     x, _, new_layers = _run_groups(
         params, cfg, x, positions, cache["layers"], img, decode=False, train=False,
-        seg_ids=seg_ids,
+        seg_ids=seg_ids, length=len_arr,
     )
     if length is None:
         x_last = x[:, -1:]

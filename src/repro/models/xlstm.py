@@ -119,7 +119,12 @@ def mlstm_mixer(
     cfg: ModelConfig,
     state: Optional[Dict] = None,
     adp: Optional[Dict] = None,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """``length`` (B,) int32: true prompt lengths for bucketed prefill —
+    padded positions get zero-weight gates (ig → -inf, lf → 0) so the
+    materialized (C, n, m) matches an unpadded prefill; valid outputs are
+    already pad-independent through causality."""
     from repro.models.mamba import _causal_conv
 
     B, S, d = x.shape
@@ -131,18 +136,35 @@ def mlstm_mixer(
     up = adapted_matmul(x, p["x_up"], (adp or {}).get("x_up"))
     u, z = jnp.split(up, 2, axis=-1)  # (B,S,di) each
     u = shard(u, "batch", None, "ff")
-    xc, new_conv = _causal_conv(u, p["m_conv"], state["conv"] if decode else None)
+    xc, new_conv = _causal_conv(
+        u, p["m_conv"], state["conv"] if decode else None,
+        length=None if decode else length,
+    )
     xc = jax.nn.silu(xc)
     # q, k from the conv'd path; v from the raw up-projection (xLSTM block).
-    qkv_c = adapted_matmul(xc, p["x_qkv"], (adp or {}).get("x_qkv"))
+    # v must go through the adapter too: the serving contract is that the
+    # runtime path equals the λ-merged weight W + B·λ·A, whose v columns
+    # carry the adapter delta as well.  Column-slicing W and A before the
+    # matmul is exact (each output column is independent) at 1/3 the cost
+    # of projecting the full 3·di and discarding two thirds.
+    adp_qkv = (adp or {}).get("x_qkv")
+    qkv_c = adapted_matmul(xc, p["x_qkv"], adp_qkv)
     q, k, _ = jnp.split(qkv_c, 3, axis=-1)
-    v = u @ p["x_qkv"][..., 2 * di :]
+    adp_v = None if adp_qkv is None else {**adp_qkv, "A": adp_qkv["A"][..., 2 * di :]}
+    v = adapted_matmul(u, p["x_qkv"][..., 2 * di :], adp_v)
     q = q.reshape(B, S, H, dh)
     k = k.reshape(B, S, H, dh)
     v = v.reshape(B, S, H, dh)
     gates = xc.astype(jnp.float32) @ p["x_gates"] + p["x_gates_b"]  # (B,S,2H)
     ig, fg = jnp.split(gates, 2, axis=-1)
     lf = jax.nn.log_sigmoid(fg)
+    if not decode and length is not None:
+        # padded steps contribute zero input weight (ig → -inf) and carry
+        # the state unchanged (f = 1 ⇒ lf = 0): Σ log f and the stabilizer
+        # max stop at position length-1, exactly the unpadded values.
+        valid = (jnp.arange(S)[None, :] < length[:, None])[..., None]  # (B,S,1)
+        ig = jnp.where(valid, ig, -1e30)
+        lf = jnp.where(valid, lf, 0.0)
 
     if decode:
         inner = {"C": state["C"], "n": state["n"], "m": state["m"]}
@@ -179,6 +201,12 @@ def init_mlstm_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
         "n": jnp.zeros((*n, batch, H, dh), jnp.float32),
         "m": jnp.full((*n, batch, H), -1e30, jnp.float32),
     }
+
+
+def mlstm_state_lane_axes(lead_ndim: int):
+    """LaneState protocol: batch/lane axis of ``init_mlstm_state`` leaves
+    (note ``m`` inits to -1e30 — lane resets must restore that, not zero)."""
+    return {"conv": lead_ndim, "C": lead_ndim, "n": lead_ndim, "m": lead_ndim}
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +265,11 @@ def slstm_mixer(
     cfg: ModelConfig,
     state: Optional[Dict] = None,
     adp: Optional[Dict] = None,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """``length`` (B,) int32: true prompt lengths for bucketed prefill —
+    the sequential scan freezes each row's carry once ``t >= length``, so
+    the final state matches an unpadded prefill."""
     B, S, d = x.shape
     decode = state is not None and S == 1
     wx = adapted_matmul(x, p["x_qkv"], (adp or {}).get("x_qkv"))  # (B,S,4d)
@@ -252,11 +284,15 @@ def slstm_mixer(
             for i in range(4)
         )
 
-        def step(carry, wx_t):
+        def step(carry, xs):
+            wx_t, t = xs
             new = _slstm_step(cfg, p, carry, wx_t)
+            if length is not None:
+                keep = (t < length)[:, None]  # (B, 1)
+                new = tuple(jnp.where(keep, n, o) for n, o in zip(new, carry))
             return new, new[2]
 
-        st, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+        st, hs = jax.lax.scan(step, init, (wx.transpose(1, 0, 2), jnp.arange(S)))
         hs = hs.transpose(1, 0, 2).astype(x.dtype)
         new_state = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]} if state is not None else None
     hs = rms_norm(hs, p["head_norm"], cfg.norm_eps)
@@ -275,3 +311,8 @@ def init_slstm_state(cfg: ModelConfig, batch: int, n: Tuple[int, ...], dtype):
         "h": jnp.zeros((*n, batch, d), jnp.float32),
         "m": jnp.full((*n, batch, d), -1e30, jnp.float32),
     }
+
+
+def slstm_state_lane_axes(lead_ndim: int):
+    """LaneState protocol: batch/lane axis of ``init_slstm_state`` leaves."""
+    return {"c": lead_ndim, "n": lead_ndim, "h": lead_ndim, "m": lead_ndim}

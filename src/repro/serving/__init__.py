@@ -46,8 +46,11 @@ Pieces
   tracks resident tokens; requests repeating a prompt prefix share its
   blocks copy-on-write.
 * :mod:`repro.serving.engine`    — the decode loop: slot-indexed per-lane
-  (or paged) KV cache, admission splicing, bucketed prefill, greedy
-  generation, plus the merged-weight per-tenant reference oracle.
+  (or paged) decode state for every family via the LaneState protocol
+  (:mod:`repro.models.lane_state` — attention KV, jamba hybrid KV+Mamba,
+  xlstm mLSTM/sLSTM), admission splicing, bucketed prefill, greedy
+  generation, streaming ``TokenEvent``\\ s, snapshot time-slicing, plus the
+  merged-weight per-tenant reference oracle.
 
 Drivers: ``launch/serve_multi.py`` (mixed-tenant batch with per-tenant
 verification against merged weights), ``benchmarks/serve_multitenant.py``
@@ -55,6 +58,7 @@ verification against merged weights), ``benchmarks/serve_multitenant.py``
 """
 from repro.serving.engine import (
     MultiTenantEngine,
+    TokenEvent,
     base_lambda,
     merge_tenant_params,
     reference_decode,
@@ -72,6 +76,7 @@ __all__ = [
     "PoolExhausted",
     "PrefixCache",
     "Request",
+    "TokenEvent",
     "base_lambda",
     "extract_lambda",
     "merge_tenant_params",

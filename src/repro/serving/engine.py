@@ -10,9 +10,17 @@ Glues the pieces together:
   ``Model.prefill`` / ``Model.decode_step`` into
   ``adapter_api.adapted_matmul`` (XLA ``take`` gather or the
   ``qrlora_bgmv`` Pallas kernel).
-* slot-indexed KV-cache management — the cache is ``per_lane=True`` (each
-  lane has its own write offset and position), so lanes hold sequences of
-  different tenants, lengths, and ages.
+* per-lane decode-state management through the **LaneState protocol**
+  (``repro.models.lane_state``): the cache is ``per_lane=True`` (each lane
+  has its own write offset and position), so lanes hold sequences of
+  different tenants, lengths, and ages.  The engine never branches on the
+  model family — admission splices a 1-lane prefill into its lane
+  (``restore_lane``), retirement resets the lane to its init value
+  (``reset_lane``), and preemption snapshots it (``extract_lane``), all
+  driven by the family's lane-axes tree (``Model.lane_axes``).  That is
+  what lets attention (dense/paged KV), hybrid jamba (paged KV **and**
+  dense Mamba ``{conv, h}`` rows in the same ``step()``), and ssm xlstm
+  (mLSTM/sLSTM states, no KV at all) share one decode loop.
 * ``paged=True`` swaps the dense ``(lanes, max_len)`` KV region for a
   global block pool + per-lane block tables (``serving/paging.py``).
   Admission allocates only the *prompt's* ``ceil(P/block_size)`` blocks and
@@ -40,12 +48,20 @@ keys on the bucket too: two prefills only share K/V when they ran the same
 compiled program, which keeps shared-prefix decode bit-identical to the
 unshared engine.
 
+``quantum=N`` adds **time-slice fairness** for dense-layout engines: a
+lane that has decoded N tokens while others queue is snapshot-preempted
+(LaneState ``extract_lane`` — O(1) per lane for recurrent families) to the
+back of the queue and later *restored* instead of re-prefilled, so long
+generations round-robin with waiting requests at zero recompute.
+
 The engine is greedy-decode and host-driven: ``step()`` = admit + grow +
-one decode step; ``run()`` loops until queue and lanes drain.
+one decode step; ``run()`` loops until queue and lanes drain, ``stream()``
+yields per-token :class:`TokenEvent`\\ s as they decode.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,15 +70,27 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
 from repro.models import build_model
+from repro.models.lane_state import extract_lane, restore_lane
+from repro.models.transformer import PAGED_FAMILIES
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
 from repro.serving.registry import AdapterRegistry, extract_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 Pytree = Any
 
-_LANE_FAMILIES = ("dense", "audio", "moe")
-
 _MIN_PREFILL_BUCKET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One decoded token, surfaced as it happens (``MultiTenantEngine.stream``)."""
+
+    uid: int
+    tenant: str
+    lane: int
+    token: int
+    index: int  # position of this token in the request's generation
+    done: bool  # True on the request's final token (retirement)
 
 
 def _bucket_len(n: int, max_len: int) -> int:
@@ -90,12 +118,29 @@ class MultiTenantEngine:
         n_blocks: Optional[int] = None,
         share_prefix: bool = False,
         watermark: int = 0,
+        quantum: Optional[int] = None,
     ):
-        if cfg.family not in _LANE_FAMILIES:
+        if cfg.is_encoder or cfg.family == "vlm":
             raise NotImplementedError(
-                f"continuous batching requires an attention KV cache "
-                f"(family {cfg.family!r} is a ROADMAP open item)"
+                f"continuous batching needs a token decode path (family "
+                f"{cfg.family!r}: vlm lanes would need per-lane image "
+                "embeds, encoders don't decode)"
             )
+        if paged and cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"paged=True needs attention layers to page; family "
+                f"{cfg.family!r} has none — its per-lane state is already "
+                "O(1), run the dense per-lane layout"
+            )
+        if quantum is not None:
+            if paged:
+                raise ValueError(
+                    "quantum time-slicing snapshots lane state, which a "
+                    "paged lane spreads over pool blocks — use the dense "
+                    "layout (paged=False) for time-sliced serving"
+                )
+            if quantum < 1:
+                raise ValueError(f"quantum={quantum} must be >= 1 decode step")
         if cfg.adapter.mode != "qr_lora":
             raise ValueError("multi-λ serving is defined for qr_lora adapters")
         self.cfg = cfg
@@ -109,6 +154,9 @@ class MultiTenantEngine:
         self.collect_logits = collect_logits
         self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.paged = paged
+        self.quantum = quantum
+        self.slice_preemptions = 0  # quantum snapshot-preemptions
+        self.events: List[TokenEvent] = []  # tokens decoded by the last step()
         if share_prefix and not paged:
             raise ValueError("share_prefix requires paged=True (blocks to share)")
         if paged:
@@ -152,6 +200,18 @@ class MultiTenantEngine:
         self.prefill_buckets: set = set()  # padded lengths actually compiled
 
         model = self.model
+        # LaneState protocol: the family's lane-axes tree drives admission
+        # splice, retirement reset, and preemption snapshot/restore — the
+        # engine itself never branches on the model family.
+        axes = model.lane_axes(paged=paged)
+        if paged:
+            lane0 = model.init_decode_state(
+                1, max_len, self.dtype, paged=True, block_size=block_size,
+                n_blocks=2,  # pools are NO_LANE leaves — never restored from
+            )
+        else:
+            lane0 = model.init_decode_state(1, max_len, self.dtype, per_lane=True)
+        init_snap = extract_lane(lane0, axes, 0)
 
         def _prefill(view, cache, tokens, seg, length):
             return model.prefill(view, cache, tokens=tokens, seg_ids=seg, length=length)
@@ -159,18 +219,20 @@ class MultiTenantEngine:
         def _decode(view, cache, tok, seg):
             return model.decode_step(view, cache, token=tok, seg_ids=seg)
 
-        def _splice(big, small, lane):
-            pos = jax.lax.dynamic_update_slice_in_dim(
-                big["pos"], small["pos"], lane, axis=0
-            )
-            layers = jax.tree_util.tree_map(
-                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
-                    b, s.astype(b.dtype), lane, axis=1
-                ),
-                big["layers"],
-                small["layers"],
-            )
-            return {"pos": pos, "layers": layers}
+        def _restore(big, small, lane):
+            """Splice a 1-lane tree (admission prefill or preemption
+            snapshot) into ``lane`` without touching neighbors."""
+            return restore_lane(big, axes, lane, small)
+
+        def _extract(cache, lane):
+            """Snapshot one lane (preemption: O(1) for recurrent state)."""
+            return extract_lane(cache, axes, lane)
+
+        def _reset(cache, lane):
+            """Return a lane to its freshly-initialized state (retirement /
+            paged release: offsets zeroed, block-table rows → trash block,
+            recurrent state re-initialized — xLSTM ``m`` back to -1e30)."""
+            return restore_lane(cache, axes, lane, init_snap)
 
         def _prefill_paged(view, cache, tokens, seg, length, lane, write_ids, table_row):
             """Block-aligned admission prefill: run the prompt through a
@@ -195,7 +257,8 @@ class MultiTenantEngine:
                 jnp.broadcast_to(jnp.asarray(block_id, jnp.int32), (G, 1, 1)),
                 (0, lane, slot),
             )
-            return {"pos": cache["pos"], "layers": {"attn": {**a, "block_tbl": tbl}}}
+            layers = {**cache["layers"], "attn": {**a, "block_tbl": tbl}}
+            return {"pos": cache["pos"], "layers": layers}
 
         def _fork_block(cache, lane, slot, src, dst):
             """Copy-on-write: copy pool block ``src`` → ``dst`` on every
@@ -210,33 +273,16 @@ class MultiTenantEngine:
                 (0, lane, slot),
             )
             attn = {"k": k, "v": v, "block_tbl": tbl, "idx": a["idx"]}
-            return {"pos": cache["pos"], "layers": {"attn": attn}}
-
-        def _release(cache, lane):
-            """Retire a lane: point its table row at trash block 0 and zero
-            its offsets, so the freed blocks can be reallocated without the
-            (still-decoding) idle lane scribbling into them."""
-            pos = jax.lax.dynamic_update_slice(
-                cache["pos"], jnp.zeros((1,), jnp.int32), (lane,)
-            )
-            a = cache["layers"]["attn"]
-            G, _, mb = a["block_tbl"].shape
-            tbl = jax.lax.dynamic_update_slice(
-                a["block_tbl"], jnp.zeros((G, 1, mb), jnp.int32), (0, lane, 0)
-            )
-            idx = jax.lax.dynamic_update_slice(
-                a["idx"], jnp.zeros((G, 1), jnp.int32), (0, lane)
-            )
-            attn = {"k": a["k"], "v": a["v"], "block_tbl": tbl, "idx": idx}
-            return {"pos": pos, "layers": {"attn": attn}}
+            return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
-        self._splice = jax.jit(_splice)
+        self._restore = jax.jit(_restore)
+        self._extract = jax.jit(_extract)
+        self._reset = jax.jit(_reset)
         self._prefill_paged = jax.jit(_prefill_paged)
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
-        self._release = jax.jit(_release)
 
     # -- tenants ------------------------------------------------------------
 
@@ -344,14 +390,27 @@ class MultiTenantEngine:
         return self.allocator.alloc(1)[0]
 
     def _preempt(self, victim: Request) -> None:
-        """Free a lane's blocks and kick its request to the queue front;
-        greedy decode re-derives the lost tokens on re-admission."""
+        """Block-pressure preemption: free a lane's blocks, reset the lane,
+        and kick its request to the queue front; greedy decode re-derives
+        the lost tokens on re-admission."""
         lane = victim.lane
         for b in self._lane_blocks.pop(lane):
             self.allocator.decref(b)
-        self.cache = self._release(self.cache, lane)
+        self.cache = self._reset(self.cache, lane)
         self.scheduler.preempt(victim)
         self.preemptions += 1
+
+    def _preempt_quantum(self, req: Request) -> None:
+        """Time-slice preemption: snapshot the lane (LaneState extract —
+        O(1) per lane for recurrent families) and re-queue at the back;
+        re-admission restores the snapshot, no recompute.  The snapshot is
+        staged to host memory so a deep queue of time-sliced requests does
+        not pin per-waiter device copies of lane state (a dense attention
+        lane's snapshot is its whole ``(max_len, KV, dh)`` K/V region);
+        restore ships it back in one transfer."""
+        req.snapshot = jax.device_get(self._extract(self.cache, req.lane))
+        self.scheduler.preempt(req, to_back=True, keep_progress=True)
+        self.slice_preemptions += 1
 
     def _grow_lanes(self) -> None:
         """Lazy growth, oldest lane first: give every active lane the block
@@ -391,9 +450,18 @@ class MultiTenantEngine:
         gate = self._admission_gate() if self.paged else None
         for req in self.scheduler.admit(gate):
             req.slot = self.registry.lookup(req.tenant)  # pinned since submit
+            req.slice_steps = 0
+            if req.snapshot is not None:
+                # time-sliced re-admission: restore the preemption snapshot
+                # into the (possibly different) lane — no prefill, no emit,
+                # decode resumes from the last generated token.
+                self.cache = self._restore(self.cache, req.snapshot, req.lane)
+                req.snapshot = None
+                continue
             seg = jnp.full((1,), req.slot, jnp.int32)
             # prompt-length bucketing: pad to a power of two so distinct
             # prompt lengths share prefill compilations; true length masks
+            # (incl. the recurrent states: padded scan steps are identities)
             P = req.prompt.size
             Pb = _bucket_len(P, self.max_len)
             padded = np.zeros((Pb,), np.int32)
@@ -409,7 +477,7 @@ class MultiTenantEngine:
                 logits, lane_cache = self._prefill(
                     view, lane_cache, jnp.asarray(padded)[None, :], seg, length
                 )
-                self.cache = self._splice(self.cache, lane_cache, req.lane)
+                self.cache = self._restore(self.cache, lane_cache, req.lane)
             self._emit(req, np.asarray(logits[0]), finished)
 
     def _admit_paged(self, req: Request, view, padded, seg, length):
@@ -453,10 +521,22 @@ class MultiTenantEngine:
         return logits
 
     def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
-        req.tokens.append(int(logits_row.argmax()))
+        tok = int(logits_row.argmax())
+        req.tokens.append(tok)
         if self.collect_logits:
             req.logits.append(logits_row)
         self.decoded_tokens += 1
+        # stream delivery is exactly-once: a block-pressure-preempted request
+        # re-derives its cleared tokens bit-identically (greedy decode is
+        # deterministic), so indexes already delivered are not re-emitted
+        if len(req.tokens) > req.delivered:
+            req.delivered = len(req.tokens)
+            self.events.append(
+                TokenEvent(
+                    uid=req.uid, tenant=req.tenant, lane=req.lane, token=tok,
+                    index=len(req.tokens) - 1, done=req.done,
+                )
+            )
         if req.done:
             lane = req.lane
             self.scheduler.finish(req)
@@ -464,14 +544,33 @@ class MultiTenantEngine:
             if self.paged:
                 for b in self._lane_blocks.pop(lane):
                     self.allocator.decref(b)  # shared blocks survive in-cache
-                self.cache = self._release(self.cache, lane)
+                # reset repoints the lane's table row at the trash block so
+                # the freed blocks can be reallocated without the idle lane
+                # scribbling into them; dense lanes skip it — admission fully
+                # overwrites every per-lane leaf, so a reset would only copy
+                # the whole cache per retirement for nothing
+                self.cache = self._reset(self.cache, lane)
             finished.append(req)
 
     def step(self) -> List[Request]:
-        """Admit waiting requests, grow/CoW-fork lanes crossing block
-        boundaries, run one shared decode step over all lanes; returns
-        requests that finished this step."""
+        """Time-slice over-quantum lanes (when work queues), admit waiting
+        requests, grow/CoW-fork lanes crossing block boundaries, run one
+        shared decode step over all lanes; returns requests that finished
+        this step.  Per-token events land in ``self.events``."""
         finished: List[Request] = []
+        self.events = []
+        if self.quantum is not None and self.scheduler.queue:
+            # preempt only as many over-quantum lanes as waiters that free
+            # lanes can't already absorb (counted before preemption re-queues
+            # victims), most-overdue first — otherwise every expiry would
+            # churn lanes through extract/restore that admission could have
+            # filled for free
+            need = len(self.scheduler.queue) - len(self.scheduler.free_lanes())
+            if need > 0:
+                over = [r for r in self.scheduler.active() if r.slice_steps >= self.quantum]
+                over.sort(key=lambda r: (-r.slice_steps, r.lane))
+                for req in over[:need]:
+                    self._preempt_quantum(req)
         self._admit(finished)
         if self.paged:
             self._grow_lanes()
@@ -487,6 +586,7 @@ class MultiTenantEngine:
         logits_np = np.asarray(logits)
         self.steps += 1
         for req in active:
+            req.slice_steps += 1
             self._emit(req, logits_np[req.lane], finished)
         return finished
 
@@ -497,6 +597,14 @@ class MultiTenantEngine:
             for req in self.step():
                 out[req.uid] = req
         return out
+
+    def stream(self) -> Iterator[TokenEvent]:
+        """Drain the queue, yielding every token as it decodes — the
+        streaming-delivery counterpart of :meth:`run` (same schedule, same
+        tokens; ``event.done`` marks a request's final token)."""
+        while self.scheduler.has_work:
+            self.step()
+            yield from self.events
 
     # -- accounting ---------------------------------------------------------
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Any, Deque, List, Optional
 
 import numpy as np
 
@@ -30,6 +30,14 @@ class Request:
     slot: int = -1  # adapter slot id (0 = base model)
     admit_seq: int = -1  # admission ordinal (preemption picks the youngest)
     preemptions: int = 0
+    slice_steps: int = 0  # decode steps since (re-)admission (time-slicing)
+    delivered: int = 0  # tokens already surfaced as stream events (monotonic:
+    # survives the discard-preempt tokens.clear() so re-derived tokens are
+    # not delivered twice)
+    # LaneState snapshot taken at preemption (``engine._extract``): when
+    # set, re-admission restores the lane instead of re-prefilling — exact
+    # for recurrent state (O(1) per lane) and dense KV lanes alike.
+    snapshot: Any = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
 
@@ -97,19 +105,34 @@ class ContinuousBatchScheduler:
         self.lanes[req.lane] = None
         req.lane = -1
 
-    def preempt(self, req: Request) -> None:
-        """Kick an active request back to the *front* of the queue (FIFO
-        re-admission: it was admitted before anything still queued, so it
-        stays ahead of them).  Generated state is discarded — greedy decode
-        is deterministic, so re-running from the prompt reproduces it."""
+    def preempt(self, req: Request, *, to_back: bool = False,
+                keep_progress: bool = False) -> None:
+        """Kick an active request off its lane, back onto the queue.
+
+        Default (block-pressure reclaim): to the *front* — FIFO
+        re-admission, it was admitted before anything still queued — with
+        generated state discarded; greedy decode is deterministic, so
+        re-running from the prompt reproduces it.
+
+        ``keep_progress=True`` (time-slice / snapshot preemption): tokens
+        and logits survive — the engine stashed a LaneState snapshot on
+        ``req.snapshot`` and will restore it instead of re-prefilling.
+        ``to_back=True`` re-queues at the tail (round-robin fairness).
+        """
         assert self.lanes[req.lane] is req
         self.lanes[req.lane] = None
         req.lane = -1
         req.admit_seq = -1
         req.preemptions += 1
-        req.tokens.clear()
-        req.logits.clear()
-        self.queue.appendleft(req)
+        req.slice_steps = 0
+        if not keep_progress:
+            req.tokens.clear()
+            req.logits.clear()
+            req.snapshot = None
+        if to_back:
+            self.queue.append(req)
+        else:
+            self.queue.appendleft(req)
 
     @property
     def has_work(self) -> bool:

@@ -90,3 +90,102 @@ def test_cli_exit_codes_and_summary(tmp_path):
 def test_cli_rejects_missing_files(tmp_path):
     with pytest.raises(FileNotFoundError):
         bench_compare.main([str(tmp_path / "nope.json"), str(tmp_path / "nope.json")])
+
+
+# ---------------------------------------------------------------------------
+# multi-run drift: ring-buffer history + monotonic-trend warning
+# ---------------------------------------------------------------------------
+
+
+def _hist(*values, name="kernel:big"):
+    return [{name: v} for v in values]
+
+
+def test_monotonic_drift_below_gate_warns():
+    """+13% steps never trip the 1.5x single-run gate, but the total 1.44x
+    over the 4-run window must surface as drift."""
+    drift = bench_compare.detect_drift(
+        _hist(1000.0, 1130.0, 1280.0), {"kernel:big": 1440.0}
+    )
+    assert "kernel:big" in drift
+    n, total = drift["kernel:big"]
+    assert n == 4 and total == pytest.approx(1.44)
+
+
+def test_non_monotonic_or_small_series_do_not_warn():
+    # dip in the middle → not a trend
+    assert not bench_compare.detect_drift(
+        _hist(1000.0, 900.0, 1100.0), {"kernel:big": 1440.0}
+    )
+    # total below the drift ratio → noise
+    assert not bench_compare.detect_drift(
+        _hist(1000.0, 1005.0, 1010.0), {"kernel:big": 1020.0}
+    )
+    # shorter history than the window → a step, not a trend
+    assert not bench_compare.detect_drift(_hist(1000.0, 1200.0), {"kernel:big": 1440.0})
+    # a 3-run window is allowed when configured explicitly
+    assert bench_compare.detect_drift(
+        _hist(1000.0, 1200.0), {"kernel:big": 1440.0}, window=3
+    )
+    # jitter-dominated baseline (≤ min_us) and interpret-mode zeros skipped
+    assert not bench_compare.detect_drift(
+        _hist(50.0, 55.0, 60.0, name="kernel:small"), {"kernel:small": 80.0}
+    )
+    assert not bench_compare.detect_drift(
+        _hist(0.0, 1100.0, 1200.0), {"kernel:big": 1440.0}
+    )
+
+
+def test_drift_downgrades_ok_deltas_only():
+    deltas = bench_compare.compare(
+        {"kernel:big": 1350.0, "kernel:other": 400.0}, {"kernel:big": 1440.0, "kernel:other": 400.0}
+    )
+    bench_compare.apply_drift(deltas, {"kernel:big": (4, 1.44)})
+    st = {d.name: d.status for d in deltas}
+    assert st["kernel:big"] == "warn" and st["kernel:other"] == "ok"
+    note = next(d.note for d in deltas if d.name == "kernel:big")
+    assert "drift" in note
+
+
+def test_cli_history_ring_buffer_and_drift_warning(tmp_path):
+    """--history: warns on creep (exit 0 — drift never fails), appends the
+    run, and trims the buffer to --history-keep entries."""
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    hist = tmp_path / "BENCH_history.json"
+    summary = tmp_path / "summary.md"
+    hist.write_text(json.dumps({"runs": [
+        {"kernel:big": 1000.0}, {"kernel:big": 1130.0}, {"kernel:big": 1280.0},
+    ]}))
+    base.write_text(json.dumps({"us_per_call": {"kernel:big": 1280.0}}))
+    curr.write_text(json.dumps({"us_per_call": {"kernel:big": 1440.0}}))
+    rc = bench_compare.main(
+        [str(base), str(curr), "--summary", str(summary), "--history", str(hist)]
+    )
+    assert rc == 0  # 1.13x step is under the gate; drift only warns
+    assert "monotonic drift" in summary.read_text()
+    runs = json.loads(hist.read_text())["runs"]
+    assert runs[-1] == {"kernel:big": 1440.0} and len(runs) == 4
+
+    # ring buffer caps at --history-keep
+    for i in range(12):
+        curr.write_text(json.dumps({"us_per_call": {"kernel:big": 1000.0}}))
+        bench_compare.main(
+            [str(base), str(curr), "--summary", str(summary),
+             "--history", str(hist), "--history-keep", "5"]
+        )
+    assert len(json.loads(hist.read_text())["runs"]) == 5
+
+
+def test_cli_history_created_when_absent(tmp_path):
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    hist = tmp_path / "deep" / "BENCH_history.json"  # parent dir created too
+    payload = json.dumps({"us_per_call": {"kernel:big": 1000.0}})
+    base.write_text(payload)
+    curr.write_text(payload)
+    assert bench_compare.main(
+        [str(base), str(curr), "--summary", str(tmp_path / "s.md"),
+         "--history", str(hist)]
+    ) == 0
+    assert json.loads(hist.read_text())["runs"] == [{"kernel:big": 1000.0}]

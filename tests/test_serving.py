@@ -244,3 +244,225 @@ def test_engine_rejects_unknown_tenant_and_overflow():
         eng.submit("ghost", np.arange(4), 4)
     with pytest.raises(ValueError):
         eng.submit(BASE_TENANT, np.arange(10), 10)  # 20 > max_len
+
+
+# ---------------------------------------------------------------------------
+# LaneState families: xlstm-only and jamba hybrid batches through the same
+# engine, verified against per-request merged-weight single-stream oracles
+# ---------------------------------------------------------------------------
+
+
+def _run_family_engine(arch, specs, **engine_kw):
+    cfg = get_reduced(arch).replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=2, n_slots=4, max_len=48, collect_logits=True, **engine_kw
+    )
+    lams = {BASE_TENANT: base_lambda(eng.params)}
+    for i in (1, 2):
+        t = f"t{i}"
+        lams[t] = random_lambda(jax.random.PRNGKey(i), eng.params, scale=0.3)
+        eng.add_tenant(t, lams[t])
+    rng = np.random.default_rng(3)
+    reqs = {}
+    for t, P, G in specs:
+        prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+        r = eng.submit(t, prompt, G)
+        reqs[r.uid] = (t, prompt, G)
+    done = eng.run()
+    assert done.keys() == reqs.keys()
+    return cfg, eng, lams, reqs, done
+
+
+# mixed prompt lengths across buckets (8 and 16) with mid-stream lane reuse
+FAMILY_SPECS = [(BASE_TENANT, 6, 4), ("t1", 9, 5), ("t2", 7, 3), ("t1", 13, 4)]
+
+
+@pytest.mark.parametrize(
+    "arch,kw",
+    [
+        ("xlstm_125m", {}),                                    # ssm: no KV at all
+        ("jamba_1_5_large_398b", {}),                          # hybrid, dense lanes
+        ("jamba_1_5_large_398b", dict(paged=True, block_size=8)),  # hybrid, paged attn
+    ],
+    ids=["xlstm", "hybrid-dense", "hybrid-paged"],
+)
+def test_engine_recurrent_families_match_merged_reference(arch, kw):
+    """The acceptance bar of the LaneState refactor: xlstm and jamba
+    tenants admit, decode, and retire in the shared batch with outputs
+    identical to merged-weight single-stream references — including the
+    hybrid's paged attention KV riding next to dense Mamba state."""
+    cfg, eng, lams, reqs, done = _run_family_engine(arch, FAMILY_SPECS, **kw)
+    for uid, req in done.items():
+        t, prompt, G = reqs[uid]
+        ref_toks, ref_logits = reference_decode(cfg, eng.params, lams[t], prompt, G, 48)
+        assert req.tokens == ref_toks, f"uid={uid} tenant={t}"
+        np.testing.assert_allclose(
+            np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4
+        )
+    if kw.get("paged"):
+        assert eng.allocator.n_free == eng.allocator.capacity, "blocks leaked"
+
+
+def test_engine_hybrid_paged_bit_identical_to_dense():
+    """Paging the hybrid's attention layers is a layout change only: tokens
+    and logits must match the dense hybrid engine bit-for-bit."""
+    _, _, _, dense_reqs, dense_done = _run_family_engine(
+        "jamba_1_5_large_398b", FAMILY_SPECS
+    )
+    _, eng, _, paged_reqs, paged_done = _run_family_engine(
+        "jamba_1_5_large_398b", FAMILY_SPECS, paged=True, block_size=8
+    )
+    for uid in dense_done:
+        assert dense_done[uid].tokens == paged_done[uid].tokens, f"uid={uid}"
+        np.testing.assert_array_equal(
+            np.stack(dense_done[uid].logits), np.stack(paged_done[uid].logits)
+        )
+
+
+def test_engine_hybrid_paged_preemption_recovers():
+    """Pool pressure on a hybrid engine preempts the youngest lane (blocks
+    freed, Mamba lane state reset) and re-derives its output exactly."""
+    cfg = get_reduced("jamba_1_5_large_398b").replace(dtype="float32")
+
+    def run(n_blocks):
+        eng = MultiTenantEngine(
+            cfg, n_lanes=2, n_slots=2, max_len=32, collect_logits=True,
+            paged=True, block_size=8, n_blocks=n_blocks,
+        )
+        a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
+        b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
+        done = eng.run()
+        assert eng.allocator.n_free == eng.allocator.capacity
+        return eng, done[a.uid], done[b.uid]
+
+    eng_big, a_big, b_big = run(n_blocks=1 + 8)  # uncontended
+    assert eng_big.preemptions == 0
+    eng, a, b = run(n_blocks=1 + 5)  # collide crossing position 16
+    assert eng.preemptions >= 1 and b.preemptions >= 1 and a.preemptions == 0
+    for got, want in ((a, a_big), (b, b_big)):
+        assert got.tokens == want.tokens
+        np.testing.assert_array_equal(np.stack(got.logits), np.stack(want.logits))
+
+
+def test_engine_family_gates():
+    with pytest.raises(NotImplementedError):  # vlm: per-lane image embeds
+        MultiTenantEngine(get_reduced("llama_3_2_vision_11b"), n_lanes=1, n_slots=2)
+    with pytest.raises(ValueError, match="has none"):  # ssm has no KV to page
+        MultiTenantEngine(get_reduced("xlstm_125m"), n_lanes=1, n_slots=2, paged=True)
+    with pytest.raises(ValueError, match="dense layout"):  # quantum needs dense
+        MultiTenantEngine(
+            get_reduced("smollm-135m"), n_lanes=1, n_slots=2, paged=True, quantum=2
+        )
+
+
+# ---------------------------------------------------------------------------
+# quantum time-slicing: snapshot preemption → exact restore (recurrent lane)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_quantum_round_robin_is_bit_identical():
+    """A recurrent (xlstm) lane preempted by the time-slice snapshots its
+    LaneState and restores it on re-admission: every request's tokens and
+    logits match the un-sliced engine bit-for-bit (extract/restore
+    round-trip determinism — the O(1)-state preemption path)."""
+    cfg = get_reduced("xlstm_125m").replace(dtype="float32")
+
+    def run(quantum):
+        eng = MultiTenantEngine(
+            cfg, n_lanes=1, n_slots=3, max_len=48, collect_logits=True,
+            quantum=quantum,
+        )
+        eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.3))
+        rng = np.random.default_rng(0)
+        subs = [
+            eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=7).astype(np.int32), 9),
+            eng.submit("t1", rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 9),
+        ]
+        eng.run()
+        return eng, subs
+
+    eng_plain, plain = run(quantum=None)
+    eng_q, sliced = run(quantum=3)
+    assert eng_q.slice_preemptions >= 2, "quantum never fired"
+    assert eng_plain.slice_preemptions == 0
+    for rp, rq in zip(plain, sliced):
+        assert rq.preemptions >= 1
+        assert rp.tokens == rq.tokens
+        np.testing.assert_array_equal(np.stack(rp.logits), np.stack(rq.logits))
+
+
+# ---------------------------------------------------------------------------
+# streaming token events
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stream_yields_every_token_in_decode_order():
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+
+    def build():
+        eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=3, max_len=32)
+        eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
+        rng = np.random.default_rng(7)
+        subs = []
+        for t, P, G in [(BASE_TENANT, 5, 4), ("t1", 8, 3), ("t1", 4, 5)]:
+            subs.append(eng.submit(t, rng.integers(2, cfg.vocab_size, size=P).astype(np.int32), G))
+        return eng, subs
+
+    eng_run, subs_run = build()
+    eng_stream, subs_stream = build()
+    events = list(eng_stream.stream())
+    # stream == run, token for token
+    eng_run.run()
+    per_uid = {}
+    for ev in events:
+        assert ev.index == len(per_uid.setdefault(ev.uid, [])), "events out of order"
+        per_uid[ev.uid].append(ev.token)
+        assert ev.tenant == subs_stream[ev.uid].tenant
+    for r_run, r_stream in zip(subs_run, subs_stream):
+        assert per_uid[r_stream.uid] == r_run.tokens
+    # exactly one terminal event per request, carrying its final token
+    finals = [ev for ev in events if ev.done]
+    assert sorted(ev.uid for ev in finals) == sorted(r.uid for r in subs_stream)
+    for ev in finals:
+        assert ev.token == subs_stream[ev.uid].tokens[-1]
+    # and events arrive before retirement would have reported them: the
+    # first event lands on the very first step, not after any drain
+    assert events[0].index == 0
+
+
+def test_engine_stream_is_exactly_once_under_preemption():
+    """A block-pressure-preempted request re-derives its cleared tokens;
+    stream() must not deliver the already-surfaced indexes twice."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=2, n_slots=2, max_len=32, paged=True, block_size=8,
+        n_blocks=1 + 5,  # two 3-block requests collide crossing position 16
+    )
+    a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
+    b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
+    events = list(eng.stream())
+    assert eng.preemptions >= 1 and b.preemptions >= 1
+    per_uid = {}
+    for ev in events:
+        assert ev.index == len(per_uid.setdefault(ev.uid, [])), (
+            f"uid={ev.uid} duplicated or skipped index {ev.index}"
+        )
+        per_uid[ev.uid].append(ev.token)
+    assert per_uid[a.uid] == a.tokens and per_uid[b.uid] == b.tokens
+
+
+def test_engine_quantum_preempts_at_most_one_lane_per_waiter():
+    """One waiting request must not churn the whole batch: only the most
+    overdue lane is snapshot-preempted, the rest keep decoding."""
+    cfg = get_reduced("xlstm_125m").replace(dtype="float32")
+    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=32, quantum=2)
+    rng = np.random.default_rng(1)
+    for _ in range(3):  # 2 lanes + 1 waiter
+        eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 8)
+    # run until the first quantum expiry fires
+    while eng.slice_preemptions == 0 and eng.scheduler.has_work:
+        before_active = len(eng.scheduler.active())
+        eng.step()
+    assert eng.slice_preemptions == 1, "both lanes churned for one waiter"
+    assert before_active == 2
+    eng.run()
