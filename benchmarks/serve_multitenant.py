@@ -23,7 +23,7 @@ import numpy as np
 from benchmarks.common import SCALE, emit
 from repro.configs import get_config, get_reduced
 from repro.kernels import ref
-from repro.serving import BASE_TENANT, MultiTenantEngine, random_lambda
+from repro.serving import BASE_TENANT, LamStore, MultiTenantEngine, random_lambda
 
 
 def bench_engine_throughput():
@@ -90,6 +90,86 @@ def bench_recurrent_families():
             f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes};"
             f"state_bytes={eng.kv_cache_bytes()}{extra}",
         )
+
+
+def bench_adapter_churn():
+    """Adapter-churn throughput of the hierarchical λ-store: register /
+    promote / evict rates with a small hot tier (64 device slots) under a
+    tenant population that only fits the host cold tier — the serving
+    regime the λ-only pitch targets (10⁴ tenants ≈ a few MB of host RAM;
+    at paper scale the registers sweep the full 10⁴).
+
+    Every register/hot-swap/evict is ONE donated jitted slot write (plus a
+    row read-back on spills), so each rate is O(one λ row) regardless of
+    n_slots; the bit-exact spill→promote round-trip is asserted inline."""
+    n_tenants = 10_000 if SCALE == "paper" else 2_000
+    n_layers, cap = (12, 160) if SCALE == "paper" else (4, 32)
+    shapes = {
+        ("attn", p): (n_layers, cap) for p in ("wq", "wk", "wv", "wo")
+    }
+    store = LamStore(shapes, n_slots=64, cold_slots=n_tenants)
+    rng = np.random.default_rng(0)
+
+    def lam(i):
+        r = np.random.default_rng(i)
+        return {
+            "attn": {
+                p: r.standard_normal((n_layers, cap), np.float32) * 0.1
+                for p in ("wq", "wk", "wv", "wo")
+            }
+        }
+
+    trees = [lam(i) for i in range(n_tenants)]  # synthesis outside the timer
+    t0 = time.time()
+    for i, tree in enumerate(trees):
+        store.register(f"t{i}", tree)
+    t_reg = (time.time() - t0) / n_tenants * 1e6
+    del trees
+    emit(
+        "serve_multitenant:churn:register",
+        t_reg,
+        f"tenants={n_tenants};hot={store.hot_capacity};spills={store.spills};"
+        f"bytes_per_tenant={store.bytes_per_tenant()};"
+        f"table_bytes={store.table_bytes()};cold_bytes={store.cold_bytes()}",
+    )
+
+    # spill → promote round-trips λ bit-identically (the cold tier is a
+    # cache of the truth, not an approximation of it)
+    probe = int(rng.integers(0, n_tenants))
+    name = f"t{probe}"
+    if store.is_hot(name):
+        store.spill(name)
+    assert store.is_cold(name)
+    slot = store.promote(name)
+    got = {k: np.asarray(v) for k, v in store.tables.items()}
+    want = lam(probe)["attn"]
+    for (mod, p), tab in got.items():
+        np.testing.assert_array_equal(
+            tab[slot], np.asarray(want[p], np.float32),
+            err_msg=f"spill→promote λ row not bit-identical for {(mod, p)}",
+        )
+
+    n_ops = 200
+    picks = rng.choice(n_tenants, size=n_ops, replace=False)
+    t0 = time.time()
+    for i in picks:
+        store.promote(f"t{i}")  # hot tenants are a no-op lookup
+    t_promote = (time.time() - t0) / n_ops * 1e6
+    emit(
+        "serve_multitenant:churn:promote",
+        t_promote,
+        f"ops={n_ops};promotes={store.promotes};spills={store.spills}",
+    )
+
+    t0 = time.time()
+    for i in picks:
+        store.evict(f"t{i}")
+    t_evict = (time.time() - t0) / n_ops * 1e6
+    emit(
+        "serve_multitenant:churn:evict",
+        t_evict,
+        f"ops={n_ops};resident={len(store)};slot_writes={store.slot_writes}",
+    )
 
 
 def bench_bgmv_overhead():
@@ -235,6 +315,7 @@ def bench_prefix_sharing():
 
 
 def main():
+    bench_adapter_churn()
     bench_bgmv_overhead()
     bench_engine_throughput()
     bench_recurrent_families()

@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""Render the benchmark-history ring buffer as a static HTML trend page.
+
+CI's bench-smoke job keeps ``BENCH_history.json`` — the last N runs'
+``{metric: us_per_call}`` dicts (``scripts/bench_compare.py --history``) —
+in the per-branch cache.  The single-run gate and the drift warning see at
+most a window of it; this script makes the whole buffer *visible*: one
+small-multiple panel per metric (each with its own µs scale — benchmark
+magnitudes span 5 orders, a shared axis would flatline most of them), the
+latest value direct-labeled, and the last run-over-run change flagged when
+it exceeds ``--flag-ratio`` (default 1.5x, the gate threshold).
+
+The page is self-contained (inline SVG + CSS, no JS, light/dark via
+``prefers-color-scheme``) so it can be dropped on gh-pages or opened from
+the CI artifact as-is.  Interpret-mode zeros are skipped the same way the
+gate skips them.  Each panel carries a <details> table of the raw runs —
+the numbers are never locked behind the graphic.
+
+Usage:
+    python scripts/bench_chart.py BENCH_history.json --out chart/index.html \\
+        [--flag-ratio 1.5] [--title "bench trends"]
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import os
+import sys
+from typing import Dict, List
+
+# Reference data-viz palette (validated light/dark pairs): series slot 1
+# for the trend line, the reserved status "serious" step only for flagging
+# a gate-threshold regression (always paired with an arrow + text).
+_CSS = """
+:root {
+  color-scheme: light dark;
+  --surface: #fcfcfb; --card: #ffffff; --border: #e5e4e0;
+  --text-primary: #0b0b0b; --text-secondary: #52514e; --text-muted: #8f8d86;
+  --grid: #ececea; --series: #2a78d6; --flag: #e34948;
+}
+@media (prefers-color-scheme: dark) {
+  :root {
+    --surface: #1a1a19; --card: #232322; --border: #3a3935;
+    --text-primary: #ffffff; --text-secondary: #c3c2b7; --text-muted: #8f8d86;
+    --grid: #32312e; --series: #3987e5; --flag: #e66767;
+  }
+}
+* { box-sizing: border-box; }
+body { margin: 0; padding: 24px; background: var(--surface);
+  color: var(--text-primary);
+  font: 14px/1.45 system-ui, -apple-system, "Segoe UI", sans-serif; }
+h1 { font-size: 18px; font-weight: 600; margin: 0 0 4px; }
+.sub { color: var(--text-secondary); margin: 0 0 20px; }
+.grid { display: grid; gap: 12px;
+  grid-template-columns: repeat(auto-fill, minmax(310px, 1fr)); }
+.card { background: var(--card); border: 1px solid var(--border);
+  border-radius: 8px; padding: 12px 14px; }
+.name { color: var(--text-secondary); font-size: 12px;
+  overflow-wrap: anywhere; }
+.val { font-size: 20px; font-weight: 600; font-variant-numeric: tabular-nums; }
+.val small { font-size: 12px; font-weight: 400; color: var(--text-muted); }
+.delta { font-size: 12px; color: var(--text-secondary);
+  font-variant-numeric: tabular-nums; }
+.delta.flag { color: var(--flag); font-weight: 600; }
+svg { display: block; width: 100%; height: auto; margin-top: 6px; }
+.spark { stroke: var(--series); stroke-width: 2; fill: none;
+  stroke-linejoin: round; stroke-linecap: round; }
+.dot { fill: var(--series); }
+.dot-last { fill: var(--series); stroke: var(--card); stroke-width: 2; }
+.gridline { stroke: var(--grid); stroke-width: 1; }
+.axis { fill: var(--text-muted); font-size: 10px;
+  font-variant-numeric: tabular-nums; }
+details { margin-top: 8px; }
+summary { color: var(--text-muted); font-size: 12px; cursor: pointer; }
+table { border-collapse: collapse; margin-top: 6px; width: 100%; }
+td, th { text-align: right; padding: 2px 8px; font-size: 12px;
+  font-variant-numeric: tabular-nums; border-top: 1px solid var(--border);
+  color: var(--text-secondary); }
+th { color: var(--text-muted); font-weight: 500; }
+"""
+
+_W, _H, _PAD = 300, 72, 8
+
+
+def _fmt_us(v: float) -> str:
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}s"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f}ms"
+    return f"{v:.1f}µs"
+
+
+def _spark_svg(pts_iv: List, n_runs: int) -> str:
+    """One small-multiple line: own y-scale (min..max padded), recessive
+    mid gridline, a native-tooltip hover target per run, last point
+    emphasized.  Each point carries its true run index, so x positions and
+    tooltips stay honest when a metric is missing from *any* run — gaps in
+    the middle stay gaps, they don't shift earlier points."""
+    vals = [v for _, v in pts_iv]
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or max(abs(hi), 1e-9) * 0.1
+    lo, hi = lo - 0.08 * span, hi + 0.08 * span
+
+    def xy(i: int, v: float):
+        x = _PAD + (_W - 2 * _PAD) * (i / max(n_runs - 1, 1))
+        y = _PAD + (_H - 2 * _PAD) * (1 - (v - lo) / (hi - lo))
+        return x, y
+
+    pts = [xy(i, v) for i, v in pts_iv]
+    path = "M" + " L".join(f"{x:.1f} {y:.1f}" for x, y in pts)
+    mid_y = _H / 2
+    dots = []
+    for k, ((x, y), (i, v)) in enumerate(zip(pts, pts_iv)):
+        last = k == len(pts_iv) - 1
+        dots.append(
+            f'<circle cx="{x:.1f}" cy="{y:.1f}" r="{5 if last else 3}" '
+            f'class="{"dot-last" if last else "dot"}">'
+            f"<title>run {i + 1}/{n_runs}: {_fmt_us(v)}</title></circle>"
+        )
+    return (
+        f'<svg viewBox="0 0 {_W} {_H}" role="img" '
+        f'aria-label="trend, {len(vals)} runs, {_fmt_us(min(vals))} to {_fmt_us(max(vals))}">'
+        f'<line x1="{_PAD}" y1="{mid_y}" x2="{_W - _PAD}" y2="{mid_y}" class="gridline"/>'
+        f'<path d="{path}" class="spark"/>{"".join(dots)}'
+        f'<text x="{_W - _PAD}" y="{_PAD - 1}" text-anchor="end" class="axis">{_fmt_us(max(vals))}</text>'
+        f'<text x="{_W - _PAD}" y="{_H - 1}" text-anchor="end" class="axis">{_fmt_us(min(vals))}</text>'
+        "</svg>"
+    )
+
+
+def _panel(name: str, pts_iv: List, n_runs: int, flag_ratio: float) -> str:
+    cur = pts_iv[-1][1]
+    delta = ""
+    # only adjacent runs are comparable — across a gap, "vs previous run"
+    # would flag a jump the gate itself never measured
+    if (
+        len(pts_iv) >= 2
+        and pts_iv[-2][1] > 0
+        and pts_iv[-1][0] - pts_iv[-2][0] == 1
+    ):
+        r = cur / pts_iv[-2][1]
+        flagged = r > flag_ratio
+        arrow = "▲" if r >= 1 else "▼"
+        cls = "delta flag" if flagged else "delta"
+        note = f" — over the {flag_ratio:g}x gate" if flagged else ""
+        delta = (
+            f'<span class="{cls}">{arrow} {r:.2f}x vs previous run{note}</span>'
+        )
+    rows = "".join(
+        f"<tr><td>{i + 1}</td><td>{v:.1f}</td></tr>" for i, v in pts_iv
+    )
+    table = (
+        f"<details><summary>runs table ({len(pts_iv)})</summary>"
+        f"<table><tr><th>run</th><th>µs/call</th></tr>{rows}</table></details>"
+    )
+    return (
+        f'<div class="card"><div class="name">{html.escape(name)}</div>'
+        f'<div class="val">{_fmt_us(cur)} <small>latest of {len(pts_iv)} runs</small></div>'
+        f"{delta}{_spark_svg(pts_iv, n_runs)}{table}</div>"
+    )
+
+
+def render(history: Dict, *, flag_ratio: float = 1.5, title: str = "Benchmark trends") -> str:
+    runs: List[Dict[str, float]] = history.get("runs", [])
+    series: Dict[str, List] = {}  # name → [(run index, value)]
+    for i, run in enumerate(runs):
+        for name, v in run.items():
+            if v and v > 0:  # interpret-mode zeros carry no information
+                series.setdefault(name, []).append((i, float(v)))
+    panels = "".join(
+        _panel(name, pts, len(runs), flag_ratio)
+        for name, pts in sorted(series.items())
+    )
+    if not panels:
+        panels = '<p class="sub">history buffer is empty — nothing to chart yet</p>'
+    return (
+        "<!doctype html><html><head><meta charset='utf-8'>"
+        f"<meta name='viewport' content='width=device-width, initial-scale=1'>"
+        f"<title>{html.escape(title)}</title><style>{_CSS}</style></head><body>"
+        f"<h1>{html.escape(title)}</h1>"
+        f'<p class="sub">{len(runs)} runs in the ring buffer · each panel has its '
+        "own µs scale · ▲/▼ compare the last two runs · hover a point for its "
+        "value</p>"
+        f'<div class="grid">{panels}</div></body></html>'
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("history", help="BENCH_history.json ring buffer")
+    ap.add_argument("--out", default="bench_chart/index.html")
+    ap.add_argument("--flag-ratio", type=float, default=1.5,
+                    help="flag a last-step ratio above this (the gate value)")
+    ap.add_argument("--title", default="QR-LoRA bench trends")
+    args = ap.parse_args(argv)
+    if os.path.exists(args.history):
+        with open(args.history) as f:
+            history = json.load(f)
+    else:
+        print(f"[bench_chart] {args.history} missing — rendering empty page")
+        history = {"runs": []}
+    page = render(history, flag_ratio=args.flag_ratio, title=args.title)
+    parent = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(parent, exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(page)
+    n = len(history.get("runs", []))
+    print(f"[bench_chart] wrote {args.out} ({n} runs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

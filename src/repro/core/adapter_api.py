@@ -73,23 +73,35 @@ def adapted_matmul(
         return x @ W
     seg = adp.get("seg")
     if seg is not None:
-        from repro.sharding.rules import get_mesh
+        from repro.sharding.rules import get_mesh, lam_slot_axis
 
         lam_table = adp["lam"]  # (n_slots, r)
+        mesh = get_mesh()
         # "auto": the BGMV kernel is the fast path on an unsharded real TPU;
         # the take gather lowers everywhere else (CPU engine tests, and any
         # installed mesh — pallas_call does not lower under GSPMD sharding).
         if kernel == "pallas" or (
             kernel == "auto"
             and jax.default_backend() == "tpu"
-            and get_mesh() is None
+            and mesh is None
         ):
             from repro.kernels import ops as _kops
 
             return _kops.qrlora_bgmv(
                 x, W, adp["B"], adp["A"], lam_table, seg, scale=scale
             )
-        lam_rows = jnp.take(lam_table, seg.astype(jnp.int32), axis=0)
+        lam_axis = lam_slot_axis()
+        if mesh is not None and lam_axis is not None:
+            # λ table sharded over its slot axis (serving/lam_store with
+            # shard_lam): gather rows from local shards only — bit-identical
+            # to the replicated take, each device holds n_slots/axis_size rows
+            from repro.kernels.qrlora_bgmv import lam_gather_sharded
+
+            lam_rows = lam_gather_sharded(
+                lam_table, seg, mesh=mesh, axis=lam_axis
+            )
+        else:
+            lam_rows = jnp.take(lam_table, seg.astype(jnp.int32), axis=0)
         lam_rows = lam_rows.reshape(
             seg.shape[0], *([1] * (x.ndim - 2)), lam_table.shape[-1]
         ).astype(x.dtype)

@@ -18,6 +18,13 @@ the λ table rides whole in VMEM (n_slots·r·4B, ~40 KB at 64 slots × r=160).
 
 VMEM working set ≈ qrlora_matmul + n_slots·r + bm·n_slots — still ≪ 16 MB
 at the defaults.
+
+Sharded λ tables: when the serving λ-store shards the slot axis over the
+mesh model axis (``serving/lam_store.py``, ``lam_slots`` logical axis),
+:func:`lam_gather_sharded` reassembles λ rows from *local* shards under
+``shard_map`` — each device holds only ``n_slots / axis_size`` rows, and
+the psum of one owned row plus exact zeros is bit-identical to a
+replicated ``jnp.take``.
 """
 from __future__ import annotations
 
@@ -29,6 +36,41 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import CompilerParams
+
+
+def lam_gather_sharded(
+    lam_table: jax.Array,  # (n_slots, r), sharded over axis 0 along `axis`
+    seg: jax.Array,  # (B,) int32 global slot ids
+    *,
+    mesh,
+    axis,
+) -> jax.Array:
+    """λ-row gather that consumes only the *local* shard of the slot table.
+
+    Replicating a ``(n_slots, r)`` λ table on every device caps resident
+    tenants at one device's HBM; sharding the slot axis over the mesh model
+    axis divides it by the axis size.  Each device maps the global slot ids
+    into its own shard (out-of-shard ids masked to exact zeros) and a psum
+    reassembles the rows.  Every slot lives on exactly one shard, so the
+    sum is one real row plus zeros — **bit-identical** to ``jnp.take`` on
+    the replicated table (x + 0.0 is exact), which is what keeps the
+    sharded engine's decode bitwise equal to the replicated one.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def body(tab, seg_ids):
+        n_local = tab.shape[0]
+        local = seg_ids - jax.lax.axis_index(axis) * n_local
+        ok = (local >= 0) & (local < n_local)
+        rows = jnp.take(tab, jnp.clip(local, 0, n_local - 1), axis=0)
+        rows = jnp.where(ok[:, None], rows, jnp.zeros_like(rows))
+        return jax.lax.psum(rows, axis)
+
+    return shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P()), out_specs=P()
+    )(lam_table, seg.astype(jnp.int32))
 
 
 def _kernel(

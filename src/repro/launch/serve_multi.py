@@ -72,6 +72,18 @@ def main(argv=None):
         "headroom (reduces mid-decode preemptions)",
     )
     ap.add_argument(
+        "--cold-slots", type=int, default=0,
+        help="host cold-tier capacity (tenants): λ evicted from the hot "
+        "device slots spills to host arrays and is promoted back on "
+        "admission, so tenant capacity is bounded by host RAM (0 disables)",
+    )
+    ap.add_argument(
+        "--shard-lam", action="store_true",
+        help="shard the packed λ slot tables over a 1-D 'model' mesh "
+        "spanning all local devices (bit-identical to replicated; try on "
+        "CPU with XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument(
         "--quantum", type=int, default=None,
         help="time-slice fairness: snapshot-preempt a lane after this many "
         "decode steps while requests queue (dense layout only; exact "
@@ -100,11 +112,20 @@ def main(argv=None):
         )
     if args.quantum is not None and args.paged:
         ap.error("--quantum needs the dense layout; drop --paged")
-    # the driver submits for every tenant it registers, so its pool must
-    # hold them all at once (LRU eviction is exercised in tests/test_serving)
-    n_slots = max(args.slots, args.tenants + 1)
-    if n_slots != args.slots:
-        print(f"[serve_multi] raising --slots {args.slots} → {n_slots} to hold all tenants")
+    # the driver submits for every tenant it registers, so the *store* must
+    # hold them all at once: without a cold tier that means one hot slot
+    # each (LRU eviction is exercised in tests/test_serving); with one, the
+    # hot tier may be tiny — overflow spills and admission promotes back.
+    n_slots = args.slots
+    if args.cold_slots == 0:
+        n_slots = max(args.slots, args.tenants + 1)
+        if n_slots != args.slots:
+            print(f"[serve_multi] raising --slots {args.slots} → {n_slots} to hold all tenants")
+    elif (n_slots - 1) + args.cold_slots < args.tenants - 1:
+        ap.error(
+            f"--tenants {args.tenants} exceeds hot+cold capacity "
+            f"({n_slots - 1} + {args.cold_slots}); raise --cold-slots"
+        )
     engine = MultiTenantEngine(
         cfg,
         n_lanes=args.lanes,
@@ -118,8 +139,25 @@ def main(argv=None):
         share_prefix=args.share_prefix,
         watermark=args.watermark,
         quantum=args.quantum,
+        cold_slots=args.cold_slots,
+        shard_lam=args.shard_lam,
     )
     print(f"[serve_multi] family={cfg.family} layout={'paged' if args.paged else 'dense'}")
+    reg = engine.registry
+    if args.shard_lam:
+        import jax as _jax
+        print(
+            f"[serve_multi] λ-tables sharded over {len(_jax.devices())} "
+            f"device(s): {reg.n_slots} slots, "
+            f"{reg.table_bytes() // len(_jax.devices())} bytes/device "
+            f"(replicated would be {reg.table_bytes()})"
+        )
+    if args.cold_slots:
+        print(
+            f"[serve_multi] λ-store tiers: hot={reg.hot_capacity} slots "
+            f"({reg.table_bytes()} B HBM) cold={args.cold_slots} tenants "
+            f"(≤{reg.bytes_per_tenant() * args.cold_slots} B host)"
+        )
     if args.paged:
         print(
             f"[serve_multi] paged KV: block_size={args.block_size} "
@@ -168,6 +206,13 @@ def main(argv=None):
     if args.quantum is not None:
         print(f"[serve_multi] quantum={args.quantum}: "
               f"{engine.slice_preemptions} snapshot time-slices")
+    if args.cold_slots:
+        print(
+            f"[serve_multi] λ churn: {reg.spills} spills, {reg.promotes} "
+            f"promotes, {reg.cold_registers} cold registers, "
+            f"{engine.deferred_promotions} deferred admissions, "
+            f"cold_bytes={reg.cold_bytes()}"
+        )
     if args.paged:
         msg = (
             f"[serve_multi] pool peak={engine.allocator.peak_in_use}/"

@@ -36,8 +36,11 @@ Slot 0 holds λ ≡ 0: the base model is just another tenant in the batch.
 Pieces
 ======
 
-* :mod:`repro.serving.registry`  — λ-pool: load / pin / hot-swap per-tenant
-  λ into packed device tables, LRU eviction, slot-0 base tenant.
+* :mod:`repro.serving.lam_store` — hierarchical λ-store: load / pin /
+  hot-swap per-tenant λ into packed device tables (one donated slot write
+  per mutation), LRU eviction with a host cold tier (spill → promote), a
+  slot-0 base tenant, and optional mesh sharding of the slot axis
+  (``repro.serving.registry`` re-exports the old ``AdapterRegistry`` name).
 * :mod:`repro.serving.scheduler` — continuous batching: FIFO request queue
   over fixed decode lanes, prefill/decode interleaving, per-lane slot ids.
 * :mod:`repro.serving.paging`    — ref-counted block allocator + prefix
@@ -63,13 +66,22 @@ from repro.serving.engine import (
     merge_tenant_params,
     reference_decode,
 )
+from repro.serving.lam_store import (
+    BASE_TENANT,
+    COLD_SLOT,
+    AdapterRegistry,
+    LamStore,
+    extract_lambda,
+    random_lambda,
+)
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
-from repro.serving.registry import BASE_TENANT, AdapterRegistry, extract_lambda, random_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 __all__ = [
     "AdapterRegistry",
     "BASE_TENANT",
+    "COLD_SLOT",
+    "LamStore",
     "BlockAllocator",
     "ContinuousBatchScheduler",
     "MultiTenantEngine",

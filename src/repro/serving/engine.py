@@ -2,8 +2,19 @@
 
 Glues the pieces together:
 
-* :class:`~repro.serving.registry.AdapterRegistry` — packed λ slot tables,
-  installed into a parameter *view* (weights and QR factors shared).
+* :class:`~repro.serving.lam_store.LamStore` — the hierarchical λ-store:
+  packed λ slot tables (hot tier, O(one λ row) donated slot writes)
+  installed into a parameter *view* (weights and QR factors shared), plus
+  an optional host **cold tier** (``cold_slots=N``): evicted tenants spill
+  their λ rows to host arrays and admission **promotes them on demand** —
+  a queued request whose tenant is cold defers (exactly like a full block
+  pool defers admission) until a hot slot can be freed, so tenant capacity
+  is bounded by host RAM, not HBM.  With ``shard_lam=True`` the slot axis
+  of every λ table is sharded over a 1-D ``"model"`` mesh spanning the
+  local devices (``lam_slots`` logical axis in ``sharding/rules.py``), and
+  the λ-row gather consumes local shards only
+  (``kernels.qrlora_bgmv.lam_gather_sharded``) — bit-identical to the
+  replicated gather, with per-device table HBM divided by the mesh size.
 * :class:`~repro.serving.scheduler.ContinuousBatchScheduler` — FIFO queue
   over fixed decode lanes.
 * the batched multi-λ adapter matmul — per-lane ``seg_ids`` flow through
@@ -61,20 +72,23 @@ yields per-token :class:`TokenEvent`\\ s as they decode.
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
 from repro.models import build_model
 from repro.models.lane_state import extract_lane, restore_lane
 from repro.models.transformer import PAGED_FAMILIES
+from repro.serving.lam_store import AdapterRegistry, extract_lambda
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
-from repro.serving.registry import AdapterRegistry, extract_lambda
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
+from repro.sharding.rules import axis_rules
 
 Pytree = Any
 
@@ -119,6 +133,8 @@ class MultiTenantEngine:
         share_prefix: bool = False,
         watermark: int = 0,
         quantum: Optional[int] = None,
+        cold_slots: int = 0,
+        shard_lam: bool = False,
     ):
         if cfg.is_encoder or cfg.family == "vlm":
             raise NotImplementedError(
@@ -148,7 +164,29 @@ class MultiTenantEngine:
         self.params = (
             params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         )
-        self.registry = AdapterRegistry.from_params(self.params, n_slots=n_slots)
+        # λ-store tiers + sharding: a 1-D "model" mesh over the local
+        # devices carries the slot axis of the packed λ tables when
+        # shard_lam is on; the minimal rule table maps ONLY the λ-table
+        # logical axis — weights/activations stay replicated, so the
+        # sharded engine's math is bit-identical to the replicated one.
+        self._cold_tier = cold_slots > 0
+        # admissions deferred on a cold tenant — counted once per deferral
+        # episode (a request waiting N steps is one deferral, not N)
+        self.deferred_promotions = 0
+        self._deferred_uids: set = set()
+        self._mesh = None
+        self._mesh_rules = None
+        if shard_lam:
+            self._mesh = make_mesh((len(jax.devices()),), ("model",))
+            self._mesh_rules = {"lam_slots": "model"}
+        with self._rules_ctx():
+            self.registry = AdapterRegistry.from_params(
+                self.params, n_slots=n_slots, cold_slots=cold_slots,
+                mesh=self._mesh,
+            )
+        # tier pressure can drop a tenant without an explicit evict — its
+        # prefix-cache family must be reclaimed just as eagerly
+        self.registry.on_drop = lambda tenant, dg: self._drop_stale_family(dg)
         self.scheduler = ContinuousBatchScheduler(n_lanes)
         self.n_lanes, self.max_len = n_lanes, max_len
         self.collect_logits = collect_logits
@@ -193,8 +231,6 @@ class MultiTenantEngine:
             self.cache = self.model.init_decode_state(
                 n_lanes, max_len, self.dtype, per_lane=True
             )
-        self._view_version = -1
-        self._view: Optional[Pytree] = None
         self.steps = 0
         self.decoded_tokens = 0
         self.prefill_buckets: set = set()  # padded lengths actually compiled
@@ -275,26 +311,65 @@ class MultiTenantEngine:
             attn = {"k": k, "v": v, "block_tbl": tbl, "idx": a["idx"]}
             return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+        # model-forward jits trace adapted_matmul, which consults the
+        # logical-axis rules for the λ-table sharding — keep the rule
+        # context active around every call (the tracing one included)
+        self._prefill = self._with_rules(jax.jit(_prefill))
+        self._decode = self._with_rules(jax.jit(_decode))
         self._restore = jax.jit(_restore)
         self._extract = jax.jit(_extract)
         self._reset = jax.jit(_reset)
-        self._prefill_paged = jax.jit(_prefill_paged)
+        self._prefill_paged = self._with_rules(jax.jit(_prefill_paged))
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
+
+    def _rules_ctx(self):
+        if self._mesh is None:
+            return nullcontext()
+        return axis_rules(self._mesh, self._mesh_rules)
+
+    def _with_rules(self, jf):
+        if self._mesh is None:
+            return jf
+
+        def wrapped(*args):
+            with self._rules_ctx():
+                return jf(*args)
+
+        wrapped._cache_size = getattr(jf, "_cache_size", None)
+        return wrapped
 
     # -- tenants ------------------------------------------------------------
 
     def add_tenant(self, tenant: str, lam_tree) -> int:
-        """Register/hot-swap a tenant's λ checkpoint; returns its slot."""
-        return self.registry.register(tenant, lam_tree)
+        """Register/hot-swap a tenant's λ checkpoint; returns its hot slot
+        (or ``COLD_SLOT`` when it landed in the host cold tier).  A
+        hot-swap that retires the tenant's old λ digest eagerly drops that
+        family's prefix-cache entries."""
+        old = self.registry.digest(tenant) if tenant in self.registry else None
+        slot = self.registry.register(tenant, lam_tree)
+        self._drop_stale_family(old)
+        return slot
+
+    def remove_tenant(self, tenant: str) -> None:
+        """Drop a tenant from both λ-store tiers (no queued/active work may
+        reference it) and reclaim its prefix-cache family eagerly."""
+        old = self.registry.digest(tenant)
+        self.registry.evict(tenant)
+        self._drop_stale_family(old)
+
+    def _drop_stale_family(self, old_digest: Optional[bytes]) -> None:
+        """Prefix-cache entries keyed on a λ digest no resident tenant
+        carries can never match again — without this they would hold their
+        blocks ref'd until cache LRU finally cycles them out."""
+        if old_digest is None or self.prefix_cache is None:
+            return
+        if self.registry.digest_refcount(old_digest) == 0:
+            self.prefix_cache.drop_family(old_digest)
 
     def _params_view(self) -> Pytree:
-        if self.registry.version != self._view_version:
-            self._view = self.registry.install(self.params)
-            self._view_version = self.registry.version
-        return self._view
+        # LamStore.install() memoizes on (params identity, version) itself
+        return self.registry.install(self.params)
 
     # -- requests -----------------------------------------------------------
 
@@ -320,9 +395,16 @@ class MultiTenantEngine:
                     f"with watermark={self.watermark}) but the pool only has "
                     f"{self.allocator.capacity} — it could never be admitted"
                 )
-        # pin from submission (not admission): a queued request must keep its
-        # tenant's slot resident until it finishes
-        self.registry.pin(tenant)
+        if self._cold_tier:
+            # two-level pinning: submission only *protects* (the tenant must
+            # stay in the store but may spill to the cold tier while
+            # queued); the hot-slot pin is taken at admission, when the
+            # request actually occupies a lane.
+            self.registry.protect(tenant)
+        else:
+            # pin from submission (not admission): a queued request must keep
+            # its tenant's slot resident until it finishes
+            self.registry.pin(tenant)
         return self.scheduler.submit(tenant, prompt, max_new_tokens)
 
     # -- paged block accounting ---------------------------------------------
@@ -371,6 +453,32 @@ class MultiTenantEngine:
 
         return gate
 
+    def _make_gate(self):
+        """Compose the admission gates: promote-on-demand for cold tenants
+        (deferring, exactly like pool-full defers, when every hot slot is
+        pinned by an active lane) and the paged block-pool gate.  In
+        cold-tier mode approval also takes the hot-slot pin the lane holds
+        until retirement/preemption."""
+        paged_gate = self._admission_gate() if self.paged else None
+        if not self._cold_tier:
+            return paged_gate
+        reg = self.registry
+
+        def gate(req: Request) -> bool:
+            if not reg.is_hot(req.tenant) and reg.promote(req.tenant) is None:
+                if req.uid not in self._deferred_uids:
+                    self._deferred_uids.add(req.uid)
+                    self.deferred_promotions += 1
+                return False
+            self._deferred_uids.discard(req.uid)
+            reg.pin(req.tenant)
+            if paged_gate is not None and not paged_gate(req):
+                reg.unpin(req.tenant)
+                return False
+            return True
+
+        return gate
+
     def _reclaim_one_block(self, req: Request) -> Optional[int]:
         """One block for ``req``'s decode growth.  Scavenge cache-only
         prefix blocks first; then preempt the youngest lane (possibly
@@ -397,6 +505,8 @@ class MultiTenantEngine:
         for b in self._lane_blocks.pop(lane):
             self.allocator.decref(b)
         self.cache = self._reset(self.cache, lane)
+        if self._cold_tier:
+            self.registry.unpin(victim.tenant)  # re-pinned at re-admission
         self.scheduler.preempt(victim)
         self.preemptions += 1
 
@@ -409,6 +519,8 @@ class MultiTenantEngine:
         lane's snapshot is its whole ``(max_len, KV, dh)`` K/V region);
         restore ships it back in one transfer."""
         req.snapshot = jax.device_get(self._extract(self.cache, req.lane))
+        if self._cold_tier:
+            self.registry.unpin(req.tenant)  # re-pinned at re-admission
         self.scheduler.preempt(req, to_back=True, keep_progress=True)
         self.slice_preemptions += 1
 
@@ -446,9 +558,9 @@ class MultiTenantEngine:
     # -- the serving loop ---------------------------------------------------
 
     def _admit(self, finished: List[Request]) -> None:
-        view = self._params_view()
-        gate = self._admission_gate() if self.paged else None
+        gate = self._make_gate()
         for req in self.scheduler.admit(gate):
+            view = self._params_view()  # after gate: promotion bumps version
             req.slot = self.registry.lookup(req.tenant)  # pinned since submit
             req.slice_steps = 0
             if req.snapshot is not None:
@@ -541,6 +653,8 @@ class MultiTenantEngine:
             lane = req.lane
             self.scheduler.finish(req)
             self.registry.unpin(req.tenant)
+            if self._cold_tier:
+                self.registry.unprotect(req.tenant)
             if self.paged:
                 for b in self._lane_blocks.pop(lane):
                     self.allocator.decref(b)  # shared blocks survive in-cache

@@ -181,6 +181,11 @@ class PrefixCache:
         self.block_size = allocator.block_size
         # key → block id, LRU order (least-recently-used first)
         self._entries: "OrderedDict[bytes, int]" = OrderedDict()
+        # family index: entry key → the digest seed its chain hashed from,
+        # and seed → its entry keys — lets drop_family() reclaim a retired
+        # λ digest's blocks eagerly instead of waiting for LRU pressure
+        self._seed_of: Dict[bytes, bytes] = {}
+        self._by_seed: Dict[bytes, "OrderedDict[bytes, None]"] = {}
         self.hits = 0  # blocks reused across all matches
         self.misses = 0  # full blocks prefilled that were not cached
 
@@ -229,14 +234,43 @@ class PrefixCache:
                 continue
             self.allocator.incref(block_ids[k])
             self._entries[key] = block_ids[k]
+            self._seed_of[key] = digest
+            self._by_seed.setdefault(digest, OrderedDict())[key] = None
+
+    def _forget(self, key: bytes) -> None:
+        seed = self._seed_of.pop(key, None)
+        if seed is not None:
+            keys = self._by_seed.get(seed)
+            if keys is not None:
+                keys.pop(key, None)
+                if not keys:
+                    del self._by_seed[seed]
 
     def evict_one(self) -> bool:
         """Drop the least-recently-used entry; returns True if a block was
         actually returned to the pool (the cache was its last owner)."""
         if not self._entries:
             return False
-        _, b = self._entries.popitem(last=False)
+        key, b = self._entries.popitem(last=False)
+        self._forget(key)
         return self.allocator.decref(b)
+
+    def drop_family(self, seed_prefix: bytes) -> int:
+        """Evict every entry whose chain seed starts with ``seed_prefix``
+        (a tenant λ digest drops all of that family's buckets at once).
+
+        A hot-swapped or evicted tenant's old digest can never match again
+        — its entries would otherwise sit in the cache holding block refs
+        until LRU pressure finally cycles them out.  Returns the number of
+        blocks actually returned to the pool (blocks still referenced by
+        active lanes free nothing yet)."""
+        freed = 0
+        for seed in [s for s in self._by_seed if s.startswith(seed_prefix)]:
+            for key in list(self._by_seed.get(seed, ())):
+                b = self._entries.pop(key)
+                self._forget(key)
+                freed += bool(self.allocator.decref(b))
+        return freed
 
     def clear(self) -> int:
         """Drop every entry; returns the number of blocks freed to the pool."""

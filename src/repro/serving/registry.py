@@ -1,250 +1,19 @@
-"""Adapter registry / λ-pool for multi-tenant QR-LoRA serving.
+"""Back-compat shim: the adapter registry grew into the hierarchical
+λ-store and moved to :mod:`repro.serving.lam_store`.
 
-Every QR-LoRA adapter of a layer shares the frozen pivoted-QR factors
-(B, A) computed from the *base* weights, so a tenant is fully described by
-its λ coefficient tree: ``{module: {proj: λ (n_stack, rank_cap)}}`` — the
-exact payload of a QR-LoRA checkpoint.  The registry pins those trees into
-packed per-projection device tables
-
-    Λ[proj] : (n_slots, *stack_lead, rank_cap)  fp32
-
-indexed by *slot id*.  Slot 0 is reserved for the base model (λ ≡ 0) and is
-never evicted; the remaining slots are managed LRU with pin counts so slots
-referenced by in-flight requests are not recycled under them.
-
-``install(params)`` produces a parameter view whose adapter ``lam`` leaves
-are the tables with the slot axis moved next to the rank axis, i.e.
-``(*stack_lead, n_slots, rank_cap)`` — exactly what the layer scan slices
-down to the per-layer ``(n_slots, rank_cap)`` table consumed by
-``adapted_matmul``'s BGMV path.
+``AdapterRegistry`` (PR 1's flat, replicated, hot-only λ-pool) is now an
+alias of :class:`~repro.serving.lam_store.LamStore` — same core surface
+(register/pin/unpin/evict/lookup/install/digest), plus the host cold tier
+(``cold_slots=``), mesh-sharded slot tables (``mesh=``), and O(one λ row)
+donated slot writes.  Import from ``repro.serving.lam_store`` (or
+``repro.serving``) in new code.
 """
-from __future__ import annotations
-
-import hashlib
-import math
-from collections import OrderedDict
-from typing import Any, Dict, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-Pytree = Any
-
-BASE_TENANT = "__base__"
-
-
-def _lam_digest(flat: Dict[Tuple[str, str], Any]) -> bytes:
-    """Content hash of a λ tree — the tenant-*family* identity.
-
-    Two tenants with bit-identical λ produce bit-identical K/V for the same
-    tokens, so they may share prompt-prefix KV blocks (serving/paging.py's
-    ``PrefixCache`` keys on this digest).  Tenants whose λ differ anywhere
-    get distinct digests and never share."""
-    h = hashlib.sha1()
-    for key in sorted(flat):
-        leaf = np.asarray(flat[key], np.float32)
-        h.update(repr((key, leaf.shape)).encode())
-        h.update(np.ascontiguousarray(leaf).tobytes())
-    return h.digest()
-
-
-def extract_lambda(params: Pytree) -> Dict[str, Dict[str, jax.Array]]:
-    """Pull the λ coefficient tree out of a parameter pytree."""
-    adapters = params["groups"].get("adapters", {})
-    return {
-        mod: {proj: leaf["lam"] for proj, leaf in projs.items()}
-        for mod, projs in adapters.items()
-    }
-
-
-def random_lambda(key, params: Pytree, scale: float = 0.05) -> Dict[str, Dict[str, jax.Array]]:
-    """A synthetic tenant: i.i.d. normal λ (stand-in for a fine-tuned one)."""
-    lam0 = extract_lambda(params)
-    leaves, treedef = jax.tree_util.tree_flatten(lam0)
-    keys = jax.random.split(key, len(leaves))
-    out = [
-        jax.random.normal(k, l.shape, jnp.float32) * scale
-        for k, l in zip(keys, leaves)
-    ]
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-class AdapterRegistry:
-    """λ-pool with LRU eviction, pinning, and hot-swap.
-
-    Per-tenant state is *only* the λ vectors (~``sum(n_stack·rank_cap)``
-    fp32 scalars) — compare S-LoRA-style serving where each adapter is a
-    rank-r factor *pair* per projection (``r·(d_in+d_out)`` params).  That
-    gap is what makes thousands of resident tenants cheap here.
-    """
-
-    def __init__(self, lam_shapes: Dict[Tuple[str, str], Tuple[int, ...]], n_slots: int = 8):
-        assert n_slots >= 2, "need slot 0 (base) plus at least one tenant slot"
-        self.n_slots = n_slots
-        # (module, proj) → (n_slots, *stack_lead, cap) fp32, zero-initialized
-        # so every unused slot (and slot 0) is the base model.
-        self.tables: Dict[Tuple[str, str], jax.Array] = {
-            key: jnp.zeros((n_slots, *shape), jnp.float32)
-            for key, shape in lam_shapes.items()
-        }
-        self._lam_shapes = dict(lam_shapes)
-        # LRU order: least-recently-used first.  Slot 0 is permanently pinned.
-        self._slots: "OrderedDict[str, int]" = OrderedDict({BASE_TENANT: 0})
-        self._pins: Dict[str, int] = {BASE_TENANT: 1}
-        self._free = list(range(n_slots - 1, 0, -1))
-        self.version = 0  # bumped on any table mutation (engine cache key)
-        # tenant → λ content hash (the prefix-sharing family id); the base
-        # tenant's digest is that of the all-zeros tree, so explicit zero-λ
-        # tenants land in the same family.
-        self._digests: Dict[str, bytes] = {
-            BASE_TENANT: _lam_digest(
-                {key: np.zeros(shape, np.float32) for key, shape in lam_shapes.items()}
-            )
-        }
-
-    # -- construction -------------------------------------------------------
-
-    @classmethod
-    def from_params(cls, params: Pytree, n_slots: int = 8) -> "AdapterRegistry":
-        lam = extract_lambda(params)
-        shapes = {
-            (mod, proj): tuple(leaf.shape)
-            for mod, projs in lam.items()
-            for proj, leaf in projs.items()
-        }
-        if not shapes:
-            raise ValueError("params carry no adapters — nothing to serve")
-        return cls(shapes, n_slots=n_slots)
-
-    # -- bookkeeping --------------------------------------------------------
-
-    def __contains__(self, tenant: str) -> bool:
-        return tenant in self._slots
-
-    def __len__(self) -> int:
-        return len(self._slots)
-
-    @property
-    def tenants(self) -> Tuple[str, ...]:
-        return tuple(self._slots)
-
-    def lookup(self, tenant: str) -> int:
-        """Slot id of a resident tenant (touches LRU recency)."""
-        slot = self._slots[tenant]
-        self._slots.move_to_end(tenant)
-        return slot
-
-    def pin(self, tenant: str) -> int:
-        """Mark a tenant as referenced by an in-flight request."""
-        slot = self.lookup(tenant)
-        self._pins[tenant] = self._pins.get(tenant, 0) + 1
-        return slot
-
-    def unpin(self, tenant: str) -> None:
-        n = self._pins.get(tenant, 0) - 1
-        if n <= 0:
-            self._pins.pop(tenant, None)
-        else:
-            self._pins[tenant] = n
-
-    def _evict_lru(self) -> int:
-        for tenant in self._slots:  # least-recently-used first
-            if tenant == BASE_TENANT or self._pins.get(tenant, 0):
-                continue
-            slot = self._slots.pop(tenant)
-            self._digests.pop(tenant, None)
-            # scrub the slot so it is base-model-safe until overwritten
-            for key in self.tables:
-                self.tables[key] = self.tables[key].at[slot].set(0.0)
-            self.version += 1
-            return slot
-        raise RuntimeError(
-            f"λ-pool exhausted: all {self.n_slots} slots pinned by in-flight "
-            "requests (raise n_slots or drain the queue)"
-        )
-
-    # -- registration / hot-swap -------------------------------------------
-
-    def register(self, tenant: str, lam_tree: Dict[str, Dict[str, jax.Array]]) -> int:
-        """Load (or hot-swap) a tenant's λ into a device slot; returns it."""
-        if tenant == BASE_TENANT:
-            raise ValueError("slot 0 (base tenant) is immutable")
-        flat = {
-            (mod, proj): leaf
-            for mod, projs in lam_tree.items()
-            for proj, leaf in projs.items()
-        }
-        if set(flat) != set(self._lam_shapes):
-            raise ValueError(
-                f"λ tree keys {sorted(flat)} != registry keys {sorted(self._lam_shapes)}"
-            )
-        if tenant in self._slots:
-            if self._pins.get(tenant, 0):
-                raise RuntimeError(
-                    f"tenant {tenant!r} is pinned by in-flight requests — "
-                    "hot-swapping its λ mid-generation would mix adapters"
-                )
-            slot = self.lookup(tenant)  # hot-swap in place
-        elif self._free:
-            slot = self._free.pop()
-        else:
-            slot = self._evict_lru()
-        for key, leaf in flat.items():
-            want = self._lam_shapes[key]
-            if tuple(leaf.shape) != want:
-                raise ValueError(f"λ[{key}] shape {leaf.shape} != {want}")
-            self.tables[key] = self.tables[key].at[slot].set(
-                jnp.asarray(leaf, jnp.float32)
-            )
-        self._slots[tenant] = slot
-        self._slots.move_to_end(tenant)
-        self._digests[tenant] = _lam_digest(flat)
-        self.version += 1
-        return slot
-
-    def digest(self, tenant: str) -> bytes:
-        """λ content hash of a resident tenant (prefix-sharing family id)."""
-        return self._digests[tenant]
-
-    def evict(self, tenant: str) -> None:
-        """Explicitly drop a tenant (must not be pinned)."""
-        if tenant == BASE_TENANT:
-            raise ValueError("slot 0 (base tenant) cannot be evicted")
-        if self._pins.get(tenant, 0):
-            raise RuntimeError(f"tenant {tenant!r} is pinned by in-flight requests")
-        slot = self._slots.pop(tenant)
-        self._digests.pop(tenant, None)
-        for key in self.tables:
-            self.tables[key] = self.tables[key].at[slot].set(0.0)
-        self._free.append(slot)
-        self.version += 1
-
-    # -- parameter view -----------------------------------------------------
-
-    def install(self, params: Pytree) -> Pytree:
-        """Params view whose adapter λ leaves are the packed slot tables.
-
-        The returned tree shares every other leaf (weights, B, A) with the
-        input — installing is O(bytes of λ tables), not O(model)."""
-        groups = dict(params["groups"])
-        adapters = {
-            mod: dict(projs) for mod, projs in groups.get("adapters", {}).items()
-        }
-        for (mod, proj), table in self.tables.items():
-            leaf = dict(adapters[mod][proj])
-            # (n_slots, *lead, cap) → (*lead, n_slots, cap): the layer scan
-            # strips the lead axes, adapted_matmul sees (n_slots, cap).
-            leaf["lam"] = jnp.moveaxis(table, 0, -2)
-            adapters[mod][proj] = leaf
-        groups["adapters"] = adapters
-        return {**params, "groups": groups}
-
-    # -- accounting ---------------------------------------------------------
-
-    def bytes_per_tenant(self) -> int:
-        """Device bytes of per-tenant state (one λ row across all tables)."""
-        return sum(4 * math.prod(shape) for shape in self._lam_shapes.values())
-
-    def table_bytes(self) -> int:
-        return self.bytes_per_tenant() * self.n_slots
+from repro.serving.lam_store import (  # noqa: F401
+    BASE_TENANT,
+    COLD_SLOT,
+    AdapterRegistry,
+    LamStore,
+    _lam_digest,
+    extract_lambda,
+    random_lambda,
+)

@@ -17,6 +17,9 @@ Baseline rule table (see DESIGN.md §4):
     kv_seq  → None              # hillclimb: long-context KV sharding
     expert_ff → "model"         # MoE: TP inside each expert
     fsdp    → "data"            # param/optimizer sharding for big archs
+    lam_slots → None            # serving: packed λ-table slot axis (the
+                                # multi-tenant engine maps it to "model"
+                                # under shard_lam=True; see serving/lam_store)
 """
 from __future__ import annotations
 
@@ -57,6 +60,7 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False, dp_only: bool = False, repl
             "expert_ff": None,
             "kv_seq": None,
             "fsdp": None,
+            "lam_slots": None,
             "dp_axes": all_dp,
             "model_axis": None,
         }
@@ -68,6 +72,7 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False, dp_only: bool = False, repl
         "expert_ff": model,
         "kv_seq": None,
         "fsdp": (dp if fsdp else None),
+        "lam_slots": None,  # λ-table sharding is a serving-side opt-in
         "dp_axes": dp,  # consumed by shard_map blocks (MoE)
         "model_axis": model,
     }
@@ -100,6 +105,16 @@ def logical_spec(*names) -> P:
         else:
             out.append(rules.get(n, None))
     return P(*out)
+
+
+def lam_slot_axis() -> Optional[Any]:
+    """Mesh axis the packed λ-table *slot* dim is sharded over (the
+    ``lam_slots`` logical axis), or None when λ tables are replicated.
+    ``adapted_matmul``'s multi-tenant seg path consults this to route the
+    λ-row gather through local shards (``kernels.qrlora_bgmv``)."""
+    if get_mesh() is None:
+        return None
+    return _rules().get("lam_slots")
 
 
 def shard(x: jax.Array, *names) -> jax.Array:

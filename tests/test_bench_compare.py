@@ -189,3 +189,70 @@ def test_cli_history_created_when_absent(tmp_path):
          "--history", str(hist)]
     ) == 0
     assert json.loads(hist.read_text())["runs"] == [{"kernel:big": 1000.0}]
+
+
+# ---------------------------------------------------------------------------
+# bench_chart.py: the gh-pages trend page rendered from the ring buffer
+# ---------------------------------------------------------------------------
+
+_CHART_SPEC = importlib.util.spec_from_file_location(
+    "bench_chart",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts" / "bench_chart.py",
+)
+bench_chart = importlib.util.module_from_spec(_CHART_SPEC)
+sys.modules["bench_chart"] = bench_chart
+_CHART_SPEC.loader.exec_module(bench_chart)
+
+
+def test_chart_renders_panels_flags_and_tables(tmp_path):
+    """One panel per metric with hover tooltips and a raw-runs table;
+    interpret-mode zeros are skipped like the gate skips them; a last-step
+    jump over the flag ratio is marked (arrow + text, not color alone)."""
+    runs = [
+        {"kernel:big": 1000.0 + 10 * i, "serve:fast": 50.0,
+         "kernel:interpret": 0.0}
+        for i in range(6)
+    ]
+    runs.append({"kernel:big": 1900.0, "serve:fast": 51.0, "kernel:interpret": 0.0})
+    page = bench_chart.render({"runs": runs}, flag_ratio=1.5)
+    assert page.count('class="card"') == 2, "one panel per non-zero metric"
+    assert "kernel:interpret" not in page, "interpret zeros must be skipped"
+    assert "over the 1.5x gate" in page and "▲" in page, "regression not flagged"
+    assert page.count("<title>run") == 7 + 7, "per-run hover tooltips missing"
+    assert page.count("<details>") == 2, "raw-runs table view missing"
+    assert "NaN" not in page
+    # CLI writes the page (and creates the parent dir)
+    hist = tmp_path / "BENCH_history.json"
+    hist.write_text(json.dumps({"runs": runs}))
+    out = tmp_path / "site" / "index.html"
+    assert bench_chart.main(
+        [str(hist), "--out", str(out), "--title", "Benchmark trends"]
+    ) == 0
+    assert out.read_text() == page
+
+
+def test_chart_tolerates_empty_and_missing_history(tmp_path):
+    page = bench_chart.render({"runs": []})
+    assert "nothing to chart" in page
+    out = tmp_path / "index.html"
+    assert bench_chart.main([str(tmp_path / "missing.json"), "--out", str(out)]) == 0
+    assert "nothing to chart" in out.read_text()
+
+
+def test_chart_single_run_and_flat_series_do_not_divide_by_zero():
+    page = bench_chart.render({"runs": [{"kernel:big": 500.0}]})
+    assert "NaN" not in page and 'class="card"' in page
+    flat = bench_chart.render({"runs": [{"m": 7.0}, {"m": 7.0}, {"m": 7.0}]})
+    assert "NaN" not in flat and "Infinity" not in flat
+
+
+def test_chart_mid_history_gaps_keep_run_indices_honest():
+    """A metric absent from a middle run (disabled benchmark, rename) must
+    not shift earlier points onto later runs: tooltips carry true run ids."""
+    runs = [{"m": 100.0}, {}, {"m": 300.0}]
+    page = bench_chart.render({"runs": runs})
+    assert "<title>run 1/3: 100.0µs</title>" in page
+    assert "<title>run 3/3: 300.0µs</title>" in page
+    assert "run 2/3" not in page, "gap was papered over with a shifted point"
+    # non-adjacent points are not a run-over-run comparison: no delta badge
+    assert "vs previous run" not in page

@@ -1,0 +1,461 @@
+"""Hierarchical λ-store: O(1) donated slot writes, host cold tier
+(spill → promote), two-level pinning, digest bookkeeping, the memoized
+install view, engine promote-on-demand admission, eager prefix-family
+reclamation, and sharded-vs-replicated λ-table bit-identity on a
+2-device CPU mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_reduced
+from repro.serving import (
+    BASE_TENANT,
+    COLD_SLOT,
+    LamStore,
+    MultiTenantEngine,
+    random_lambda,
+    reference_decode,
+)
+from repro.serving.lam_store import _lam_digest
+
+SHAPES = {("attn", "wq"): (3, 8), ("mlp", "w_up"): (3, 8)}
+
+
+def _lam_tree(value):
+    out = {}
+    for (mod, proj), shape in SHAPES.items():
+        out.setdefault(mod, {})[proj] = jnp.full(shape, value, jnp.float32)
+    return out
+
+
+def _flat(tree):
+    return {
+        (mod, proj): leaf
+        for mod, projs in tree.items()
+        for proj, leaf in projs.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# O(one λ row) slot writes: one donated call, one compile, no re-pack
+# ---------------------------------------------------------------------------
+
+
+def test_register_is_single_donated_slot_write():
+    """The acceptance bar of the slot-write refactor: every
+    register/hot-swap is exactly ONE jitted donated call (counted), the
+    donation consumes the old tables in place (no full-table copy), and a
+    single compile serves every subsequent write (no per-slot recompiles)."""
+    store = LamStore(SHAPES, n_slots=4)
+    before = dict(store._tables)
+    writes0 = store.slot_writes
+    store.register("a", _lam_tree(1.0))
+    assert store.slot_writes == writes0 + 1, "register must be one slot write"
+    assert all(t.is_deleted() for t in before.values()), (
+        "slot write was not donated — the old tables were copied, not reused"
+    )
+    # hot-swap: also exactly one donated write, same slot
+    before = dict(store._tables)
+    slot = store.lookup("a")
+    assert store.register("a", _lam_tree(9.0)) == slot
+    assert store.slot_writes == writes0 + 2
+    assert all(t.is_deleted() for t in before.values())
+    # a burst of registers/hot-swaps shares ONE compiled executable
+    for i, val in enumerate([2.0, 3.0, 4.0, 5.0]):
+        store.register(f"b{i % 2}", _lam_tree(val))
+    cache_size = getattr(store._write, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() == 1, "slot writes recompiled across registers"
+
+
+def test_install_memoized_and_never_repacks():
+    store = LamStore(SHAPES, n_slots=3)
+    store.register("a", _lam_tree(2.0))
+    B = jnp.ones((3, 4, 8))
+    params = {"groups": {"adapters": {
+        "attn": {"wq": {"B": B, "A": B, "lam": jnp.zeros((3, 8)), "ranks": jnp.ones((3,), jnp.int32)}},
+        "mlp": {"w_up": {"B": B, "A": B, "lam": jnp.zeros((3, 8)), "ranks": jnp.ones((3,), jnp.int32)}},
+    }}}
+    view = store.install(params)
+    leaf = view["groups"]["adapters"]["attn"]["wq"]
+    # λ leaves ARE the packed tables: no moveaxis, no copy, ever
+    assert leaf["lam"] is store._tables[("attn", "wq")]
+    assert leaf["lam"].shape == (3, 3, 8)  # (n_stack, n_slots, cap)
+    assert leaf["B"] is B  # factors shared, not copied
+    # memoized per version: same object until a slot write
+    assert store.install(params) is view
+    store.register("b", _lam_tree(5.0))
+    view2 = store.install(params)
+    assert view2 is not view
+    assert view2["groups"]["adapters"]["attn"]["wq"]["lam"] is store._tables[("attn", "wq")]
+    assert view2["groups"]["adapters"]["attn"]["wq"]["B"] is B
+
+
+# ---------------------------------------------------------------------------
+# cold tier: spill → promote round trip, overflow registration, deferral
+# ---------------------------------------------------------------------------
+
+
+def test_cold_tier_spill_promote_roundtrip_bit_identical():
+    store = LamStore(SHAPES, n_slots=3, cold_slots=4)  # 2 usable hot slots
+    vals = {f"t{i}": float(i + 1) * 0.37 for i in range(4)}
+    for name, v in vals.items():
+        store.register(name, _lam_tree(v))
+    # overflow spilled the LRU tenants to the host tier
+    assert store.is_cold("t0") and store.is_cold("t1")
+    assert store.is_hot("t2") and store.is_hot("t3")
+    assert store.cold_bytes() == 2 * store.bytes_per_tenant()
+    for name in ("t0", "t1"):
+        assert store.digest(name) == _lam_digest(_flat(_lam_tree(vals[name])))
+    slot = store.promote("t0")
+    assert slot is not None and store.is_hot("t0")
+    tab = np.asarray(store.tables[("attn", "wq")])
+    np.testing.assert_array_equal(tab[slot], np.full((3, 8), vals["t0"], np.float32))
+    # base slot survived all the churn
+    np.testing.assert_array_equal(tab[0], 0.0)
+
+
+def test_register_lands_cold_when_hot_pinned_and_raises_without_cold():
+    def fill_and_pin(cold_slots):
+        store = LamStore(SHAPES, n_slots=3, cold_slots=cold_slots)
+        store.register("a", _lam_tree(1.0))
+        store.register("b", _lam_tree(2.0))
+        store.pin("a")
+        store.pin("b")
+        return store
+
+    store = fill_and_pin(cold_slots=0)
+    with pytest.raises(RuntimeError):  # PR-1 behavior: hard fail
+        store.register("c", _lam_tree(3.0))
+    store = fill_and_pin(cold_slots=2)
+    assert store.register("c", _lam_tree(3.0)) == COLD_SLOT
+    assert store.is_cold("c") and store.cold_registers == 1
+    # and it promotes once a pin drops
+    assert store.promote("c") is None, "promotion must defer while all pinned"
+    store.unpin("a")
+    slot = store.promote("c")
+    assert slot is not None and store.is_hot("c") and store.is_cold("a")
+
+
+def test_hot_swap_refuses_protected_tenants_in_both_tiers():
+    """A queued or preempted request holds only a residency *protect* on
+    its tenant (pins belong to active lanes) — hot-swapping the λ under it
+    would mix adapters when the request resumes from its snapshot, so
+    register() must refuse protected tenants in either tier."""
+    store = LamStore(SHAPES, n_slots=3, cold_slots=2)
+    store.register("a", _lam_tree(1.0))
+    store.protect("a")
+    with pytest.raises(RuntimeError, match="in-flight"):
+        store.register("a", _lam_tree(2.0))  # hot + protected
+    store.spill("a")
+    with pytest.raises(RuntimeError, match="in-flight"):
+        store.register("a", _lam_tree(2.0))  # cold + protected
+    store.unprotect("a")
+    assert store.register("a", _lam_tree(2.0)) == COLD_SLOT
+    slot = store.promote("a")
+    np.testing.assert_array_equal(
+        np.asarray(store.tables[("attn", "wq")])[slot], 2.0
+    )
+
+
+def test_protect_blocks_drop_but_allows_spill():
+    store = LamStore(SHAPES, n_slots=3, cold_slots=1)
+    store.register("a", _lam_tree(1.0))
+    store.protect("a")
+    store.register("b", _lam_tree(2.0))
+    # pressure: a is LRU and unpinned → it may SPILL (stays resident)...
+    store.register("c", _lam_tree(3.0))
+    assert store.is_cold("a") and "a" in store
+    # ...but never drops: the cold tier is full of it, d must go elsewhere
+    store.register("d", _lam_tree(4.0))
+    assert "a" in store, "protected tenant dropped from the store"
+    with pytest.raises(RuntimeError):
+        store.evict("a")
+    store.unprotect("a")
+    store.evict("a")
+    assert "a" not in store
+
+
+# ---------------------------------------------------------------------------
+# property test: random op traffic preserves every λ-store invariant
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n_slots=st.integers(2, 6), cold_slots=st.integers(0, 4))
+def test_lam_store_random_traffic_invariants(seed, n_slots, cold_slots):
+    """Random register/pin/unpin/protect/evict/spill/promote/hot-swap
+    traffic: slot 0 stays immutable, pinned slots are never recycled,
+    hot slots + free list always partition the table, the cold tier never
+    exceeds its capacity, and every resident tenant's λ and digest match
+    what was last registered for it — bit for bit."""
+    rng = np.random.default_rng(seed)
+    store = LamStore(SHAPES, n_slots=n_slots, cold_slots=cold_slots)
+    lam_val = {}  # tenant → last registered fill value
+    pinned = {}  # tenant → slot at pin time
+    protected = set()
+    names = [f"t{i}" for i in range(n_slots + cold_slots + 2)]
+
+    for step in range(50):
+        op = rng.integers(0, 8)
+        name = names[rng.integers(0, len(names))]
+        if op == 0 or name not in store:  # register / hot-swap
+            val = float(rng.integers(1, 1000)) / 7.0
+            in_flight = name in store and (
+                store._pins.get(name, 0) or store._protect.get(name, 0)
+            )
+            if in_flight:
+                with pytest.raises(RuntimeError):
+                    store.register(name, _lam_tree(val))
+            else:
+                try:
+                    store.register(name, _lam_tree(val))
+                    lam_val[name] = val
+                except RuntimeError:
+                    assert not store._free, "register failed with free slots"
+        elif op == 1 and store.is_hot(name):
+            pinned.setdefault(name, store.pin(name))
+        elif op == 2 and name in pinned:
+            store.unpin(name)
+            pinned.pop(name)
+        elif op == 3:
+            store.protect(name)
+            protected.add(name)
+        elif op == 4 and name in protected:
+            store.unprotect(name)
+            protected.discard(name)
+        elif op == 5:
+            if name in pinned or name in protected:
+                with pytest.raises(RuntimeError):
+                    store.evict(name)
+            else:
+                store.evict(name)
+                lam_val.pop(name, None)
+        elif op == 6 and store.is_hot(name) and name not in pinned:
+            try:
+                store.spill(name)
+            except RuntimeError:
+                assert cold_slots == 0 or len(store._cold) >= cold_slots
+        elif op == 7 and store.is_cold(name):
+            slot = store.promote(name)
+            if slot is None:
+                free_or_evictable = bool(store._free) or any(
+                    t != BASE_TENANT and not store._pins.get(t, 0)
+                    for t in store._slots
+                )
+                assert not free_or_evictable, "promotion deferred needlessly"
+
+        # -- invariants, every step ----------------------------------------
+        slots = dict(store._slots)
+        assert slots[BASE_TENANT] == 0 and 0 not in store._free
+        used = list(slots.values())
+        assert len(set(used)) == len(used), "slot double-booked"
+        assert set(used).isdisjoint(store._free)
+        assert len(used) + len(store._free) == store.n_slots, "slot leaked"
+        assert len(store._cold) <= max(cold_slots, 0)
+        for t, s in pinned.items():
+            assert store._slots.get(t) == s, "pinned slot recycled/moved"
+        for t in protected:
+            assert t in store or t == BASE_TENANT or t not in lam_val
+        for t in store.tenants:
+            if t == BASE_TENANT:
+                continue
+            assert store.digest(t) == _lam_digest(_flat(_lam_tree(lam_val[t])))
+            assert store.digest_refcount(store.digest(t)) >= 1
+
+    # -- terminal λ correctness: both tiers hold the registered bits --------
+    tabs = {k: np.asarray(v) for k, v in store.tables.items()}
+    for key in SHAPES:
+        np.testing.assert_array_equal(tabs[key][0], 0.0, err_msg="slot 0 mutated")
+    for t in store.hot_tenants:
+        if t == BASE_TENANT:
+            continue
+        for key, shape in SHAPES.items():
+            np.testing.assert_array_equal(
+                tabs[key][store._slots[t]],
+                np.full(shape, lam_val[t], np.float32),
+                err_msg=f"hot λ row of {t} diverged",
+            )
+    for t in store.cold_tenants:
+        for key, shape in SHAPES.items():
+            np.testing.assert_array_equal(
+                store._cold[t][key],
+                np.full(shape, lam_val[t], np.float32),
+                err_msg=f"cold λ row of {t} diverged",
+            )
+    # unused hot slots are base-safe (zero)
+    for s in store._free:
+        for key in SHAPES:
+            np.testing.assert_array_equal(tabs[key][s], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: promote-on-demand admission + eager prefix-family reclamation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_promotes_cold_tenant_on_admission():
+    """A request for a spilled tenant admits by promoting its λ back into a
+    hot slot — and decodes the exact merged-weight reference, proving the
+    round-tripped λ is the λ that serves."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=1, n_slots=3, max_len=32, cold_slots=8, collect_logits=True
+    )
+    lams = {}
+    for i in range(1, 5):
+        lams[f"t{i}"] = random_lambda(jax.random.PRNGKey(i), eng.params, 0.3)
+        eng.add_tenant(f"t{i}", lams[f"t{i}"])
+    assert eng.registry.is_cold("t1"), "overflow did not spill to the cold tier"
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+    req = eng.submit("t1", prompt, 4)
+    done = eng.run()
+    assert eng.registry.promotes >= 1
+    ref_toks, ref_logits = reference_decode(cfg, eng.params, lams["t1"], prompt, 4, 32)
+    assert done[req.uid].tokens == ref_toks
+    np.testing.assert_allclose(
+        np.stack(done[req.uid].logits), ref_logits, atol=1e-4, rtol=1e-4
+    )
+
+
+def test_engine_defers_admission_until_hot_slot_frees():
+    """With every hot slot pinned by active lanes, a cold tenant's request
+    defers (exactly like pool-full) and admits once a lane retires."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=32, cold_slots=4)
+    eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
+    eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.2))
+    assert eng.registry.is_cold("t1")  # t2 took the single usable hot slot
+    rng = np.random.default_rng(0)
+    r2 = eng.submit("t2", rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 8)
+    r1 = eng.submit("t1", rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 4)
+    eng.step()  # t2 admits and pins the only slot; t1 must wait
+    assert r2.lane >= 0 and r1.lane < 0
+    done = eng.run()
+    assert eng.deferred_promotions >= 1
+    assert len(done[r1.uid].tokens) == 4 and len(done[r2.uid].tokens) == 8
+
+
+def test_hot_swap_and_removal_drop_stale_prefix_families():
+    """Satellite regression: PrefixCache entries keyed on a retired λ
+    digest are reclaimed eagerly — but only once NO resident tenant still
+    carries that digest (same-λ tenants share families)."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=2, n_slots=4, max_len=32,
+        paged=True, block_size=8, share_prefix=True,
+    )
+    lam_a = random_lambda(jax.random.PRNGKey(1), eng.params, 0.2)
+    lam_b = random_lambda(jax.random.PRNGKey(2), eng.params, 0.2)
+    eng.add_tenant("t1", lam_a)
+    eng.add_tenant("t2", lam_a)  # same λ → same family digest
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)  # 2 full blocks
+    eng.submit("t1", prompt, 4)
+    eng.run()
+    assert len(eng.prefix_cache) == 2 and eng.blocks_in_use() == 2
+    # hot-swap t1 to a new λ: t2 still holds the old digest → entries live
+    eng.add_tenant("t1", lam_b)
+    assert len(eng.prefix_cache) == 2, "family dropped while a tenant still holds it"
+    # removing t2 extinguishes the digest → entries and blocks reclaimed NOW
+    eng.remove_tenant("t2")
+    assert len(eng.prefix_cache) == 0
+    assert eng.blocks_in_use() == 0, "stale family blocks not returned to the pool"
+
+
+def test_implicit_lru_drop_reclaims_prefix_family():
+    """Tier pressure can push a tenant out of the store without an explicit
+    evict (hot LRU drop, cold-room eviction) — the on_drop hook must reclaim
+    its prefix-cache family exactly like remove_tenant does."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng = MultiTenantEngine(
+        cfg, n_lanes=1, n_slots=2, max_len=32, cold_slots=1,
+        paged=True, block_size=8, share_prefix=True,
+    )
+    eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
+    rng = np.random.default_rng(0)
+    eng.submit("t1", rng.integers(2, cfg.vocab_size, size=16).astype(np.int32), 4)
+    eng.run()
+    assert len(eng.prefix_cache) == 2 and eng.blocks_in_use() == 2
+    # t2 spills t1 to the (1-slot) cold tier; t3 then needs the cold room,
+    # silently dropping t1 — which must reclaim its cached prefix blocks
+    eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.2))
+    assert eng.registry.is_cold("t1") and len(eng.prefix_cache) == 2
+    eng.add_tenant("t3", random_lambda(jax.random.PRNGKey(3), eng.params, 0.2))
+    assert "t1" not in eng.registry and eng.registry.lru_drops == 1
+    assert len(eng.prefix_cache) == 0
+    assert eng.blocks_in_use() == 0, "dropped tenant's family blocks leaked"
+
+
+# ---------------------------------------------------------------------------
+# sharded λ-table: bit-identical to replicated on a 2-device CPU mesh
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, numpy as np
+    from repro.configs import get_reduced
+    from repro.serving import BASE_TENANT, MultiTenantEngine, random_lambda
+
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+
+    def run(shard):
+        eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=4, max_len=32,
+                                collect_logits=True, shard_lam=shard)
+        for i in (1, 2):
+            eng.add_tenant(f"t{i}", random_lambda(jax.random.PRNGKey(i), eng.params, 0.3))
+        rng = np.random.default_rng(3)
+        subs = []
+        for t, P, G in [(BASE_TENANT, 6, 4), ("t1", 9, 5), ("t2", 7, 3)]:
+            subs.append(eng.submit(t, rng.integers(2, cfg.vocab_size, size=P).astype(np.int32), G))
+        eng.run()
+        return eng, subs
+
+    eng_r, subs_r = run(False)
+    eng_s, subs_s = run(True)
+    tab = next(iter(eng_s.registry._tables.values()))
+    shards = tab.addressable_shards
+    assert len(jax.devices()) == 2, jax.devices()
+    assert len(shards) == 2 and shards[0].data.shape[-2] == tab.shape[-2] // 2, (
+        "lam table is not sharded over the slot axis: "
+        f"{[s.data.shape for s in shards]} vs global {tab.shape}")
+    for rr, rs in zip(subs_r, subs_s):
+        assert rr.tokens == rs.tokens, (rr.tokens, rs.tokens)
+        assert np.array_equal(np.stack(rr.logits), np.stack(rs.logits)), (
+            "sharded decode logits not bit-identical to replicated")
+    print("SHARDED_LAM_BIT_IDENTICAL_OK")
+    """
+)
+
+
+def test_sharded_lam_decode_bit_identical_2dev():
+    """Acceptance: on a 2-device CPU mesh, the engine with mesh-sharded λ
+    tables (each device holding n_slots/2 rows) decodes bit-identically to
+    the replicated engine — the local-shard gather + psum reassembles
+    exact λ rows.  Subprocess because the device-count flag must be set
+    before jax initializes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert "SHARDED_LAM_BIT_IDENTICAL_OK" in r.stdout, (
+        r.stdout[-3000:] + r.stderr[-3000:]
+    )
