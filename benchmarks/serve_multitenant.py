@@ -240,12 +240,21 @@ def bench_paged_vs_dense():
         dt = time.time() - t0
         hbm = eng.kv_cache_bytes()
         results[mode] = (eng, dt, hbm)
+        # host-side phase attribution (telemetry histograms): where step()
+        # wall time goes — dispatch (jitted decode call) vs sync (device
+        # wait) vs admission/growth bookkeeping (ROADMAP item 1 datum)
+        phases = ",".join(
+            f"{lbl['phase']}:{h.mean:.2f}"
+            for lbl, h in eng.telemetry.step_phase.series()
+            if h.count
+        )
         emit(
             f"serve_multitenant:kv_cache:{mode}",
             dt / max(eng.steps, 1) * 1e6,
             f"hbm_bytes={hbm};tok_s={eng.decoded_tokens/dt:.0f};"
             f"lanes={lanes};max_len={max_len};"
-            f"tokens_per_mb={eng.decoded_tokens/(hbm/2**20):.1f}",
+            f"tokens_per_mb={eng.decoded_tokens/(hbm/2**20):.1f};"
+            f"host_phase_ms={phases}",
         )
     dense_hbm, paged_hbm = results["dense"][2], results["paged"][2]
     assert paged_hbm < dense_hbm, (
@@ -314,11 +323,104 @@ def bench_prefix_sharing():
     )
 
 
+def bench_telemetry_overhead():
+    """Telemetry A/B on the ``tenants=4`` throughput workload: the
+    default-on metrics + span tracing must stay invisible at serving
+    granularity.  A step is host-driven jit dispatch (~ms); every
+    instrument event is a ``perf_counter`` read + a float add, so the
+    enabled delta is parts-per-thousand.  The assert bounds run-to-run
+    scheduler noise (1.5x), not the real overhead."""
+    lanes, gen, prompt_len, max_len = (8, 16, 16, 64) if SCALE != "paper" else (16, 64, 64, 256)
+    wall = {}
+    for mode, on in (("off", False), ("on", True)):
+        eng, dt = _drive_engine(
+            "smollm-135m", n_tenants=4, lanes=lanes, prompt_len=prompt_len,
+            gen=gen, max_len=max_len, telemetry=on,
+        )
+        wall[mode] = dt
+        extra = ""
+        if on:
+            extra = (
+                f";metrics={len(eng.metrics())}"
+                f";trace_events={len(eng.telemetry.tracer.events)}"
+            )
+        emit(
+            f"serve_multitenant:engine:telemetry={mode}",
+            dt / max(eng.steps, 1) * 1e6,
+            f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes}{extra}",
+        )
+    assert wall["on"] <= wall["off"] * 1.5, (
+        f"telemetry-on run {wall['on']:.3f}s vs off {wall['off']:.3f}s — "
+        "enabled-mode overhead is no longer in the noise"
+    )
+
+
+def bench_decode_phases():
+    """Device-side phase attribution for one paged decode step: the
+    block-table K/V gather, the full paged attention (gather + masked
+    attend), and the batched multi-λ adapter matmul, each jitted and timed
+    in isolation.  Complements the host-side ``host_phase_ms`` split in
+    ``bench_paged_vs_dense``: ROADMAP item 1 (the paged layout must reach
+    dense throughput) needs to know whether the gap is the gather, the
+    attend, or adapter overhead before a fused kernel is worth writing."""
+    if SCALE != "paper":
+        lanes, bs, max_blocks, H, KV, dh = 4, 16, 32, 8, 4, 64
+    else:
+        lanes, bs, max_blocks, H, KV, dh = 8, 16, 64, 32, 8, 128
+    n_blocks = 1 + lanes * max_blocks
+    ks = jax.random.split(jax.random.PRNGKey(0), 9)
+    q = jax.random.normal(ks[0], (lanes, H, dh), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n_blocks, bs, KV, dh), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n_blocks, bs, KV, dh), jnp.float32)
+    block_tbl = jax.random.randint(ks[3], (lanes, max_blocks), 1, n_blocks)
+    lengths = jnp.full((lanes,), bs * max_blocks // 2, jnp.int32)
+    # λ-BGMV operands at serving shape: one row per lane
+    K, N, r, n_slots = (768, 768, 160, 64) if SCALE == "paper" else (256, 256, 32, 16)
+    x = jax.random.normal(ks[4], (lanes, K), jnp.float32) * 0.3
+    W = jax.random.normal(ks[5], (K, N), jnp.float32) * 0.05
+    Bm = jax.random.normal(ks[6], (K, r), jnp.float32) * 0.05
+    A = jax.random.normal(ks[7], (r, N), jnp.float32) * 0.05
+    tab = jax.random.normal(ks[8], (n_slots, r), jnp.float32)
+    seg = jnp.arange(lanes, dtype=jnp.int32) % n_slots
+
+    gather = jax.jit(
+        lambda: (
+            k_pool[block_tbl].reshape(lanes, max_blocks * bs, KV, dh),
+            v_pool[block_tbl].reshape(lanes, max_blocks * bs, KV, dh),
+        )
+    )
+    attend = jax.jit(
+        lambda: ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths)
+    )
+    bgmv = jax.jit(lambda: ref.qrlora_bgmv_ref(x, W, Bm, A, tab, seg))
+
+    times = {}
+    n = 10
+    for name, f in (("kv_gather", gather), ("attend", attend), ("bgmv", bgmv)):
+        jax.block_until_ready(f())  # compile outside the timer
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(f())
+        times[name] = (time.time() - t0) / n * 1e6
+    for name, us in times.items():
+        detail = {
+            "kv_gather": f"pool_blocks={n_blocks};table={lanes}x{max_blocks};bs={bs}",
+            "attend": (
+                f"incl_gather;gather_share={times['kv_gather']/max(us,1e-9):.2f};"
+                f"heads={H}/{KV};dh={dh}"
+            ),
+            "bgmv": f"rows={lanes};r={r};slots={n_slots}",
+        }[name]
+        emit(f"serve_multitenant:phase:{name}", us, detail)
+
+
 def main():
     bench_adapter_churn()
     bench_bgmv_overhead()
     bench_engine_throughput()
     bench_recurrent_families()
+    bench_telemetry_overhead()
+    bench_decode_phases()
     bench_paged_vs_dense()
     bench_prefix_sharing()
 

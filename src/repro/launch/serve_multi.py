@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_reduced
+from repro.obs import write_metrics
 from repro.serving import (
     BASE_TENANT,
     MultiTenantEngine,
@@ -100,7 +101,24 @@ def main(argv=None):
         "merged-weight logits, which only makes sense at full precision",
     )
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument(
+        "--no-telemetry", action="store_true",
+        help="disable the engine's metrics + span tracing (the default-on "
+        "telemetry costs ~µs/step; this is the A/B switch)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the final metrics snapshot here (.prom/.txt → "
+        "Prometheus text exposition, anything else → JSON)",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write the request-span timeline here as Chrome trace_event "
+        "JSON — load it in Perfetto (ui.perfetto.dev) or chrome://tracing",
+    )
     args = ap.parse_args(argv)
+    if args.no_telemetry and (args.metrics_out or args.trace_out):
+        ap.error("--metrics-out/--trace-out need telemetry; drop --no-telemetry")
 
     cfg = (get_reduced if args.reduced else get_config)(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
@@ -141,6 +159,7 @@ def main(argv=None):
         quantum=args.quantum,
         cold_slots=args.cold_slots,
         shard_lam=args.shard_lam,
+        telemetry=not args.no_telemetry,
     )
     print(f"[serve_multi] family={cfg.family} layout={'paged' if args.paged else 'dense'}")
     reg = engine.registry
@@ -226,6 +245,21 @@ def main(argv=None):
                 f"cached={engine.prefix_cache.cached_blocks} blocks"
             )
         print(msg)
+    if not args.no_telemetry:
+        tel = engine.telemetry
+        print(
+            f"[serve_multi] latency: ttft p50≤{tel.ttft.quantile(0.5):g}ms "
+            f"p95≤{tel.ttft.quantile(0.95):g}ms · tbt mean={tel.tbt.mean:.2f}ms "
+            f"p95≤{tel.tbt.quantile(0.95):g}ms · e2e p95≤{tel.e2e.quantile(0.95):g}ms "
+            "(bucket upper bounds)"
+        )
+        if args.metrics_out:
+            write_metrics(args.metrics_out, engine.metrics())
+            print(f"[serve_multi] metrics snapshot → {args.metrics_out}")
+        if args.trace_out:
+            tel.write_trace(args.trace_out)
+            print(f"[serve_multi] request-span trace → {args.trace_out} "
+                  "(open in ui.perfetto.dev)")
     for uid in sorted(done):
         print(f"[serve_multi] {done[uid].tenant}: {done[uid].tokens[:12]}")
 

@@ -83,6 +83,7 @@ from repro.compat import make_mesh
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
 from repro.models import build_model
+from repro.obs import Telemetry
 from repro.models.lane_state import extract_lane, restore_lane
 from repro.models.transformer import PAGED_FAMILIES
 from repro.serving.lam_store import AdapterRegistry, extract_lambda
@@ -135,6 +136,7 @@ class MultiTenantEngine:
         quantum: Optional[int] = None,
         cold_slots: int = 0,
         shard_lam: bool = False,
+        telemetry: bool = True,
     ):
         if cfg.is_encoder or cfg.family == "vlm":
             raise NotImplementedError(
@@ -170,10 +172,16 @@ class MultiTenantEngine:
         # logical axis — weights/activations stay replicated, so the
         # sharded engine's math is bit-identical to the replicated one.
         self._cold_tier = cold_slots > 0
-        # admissions deferred on a cold tenant — counted once per deferral
-        # episode (a request waiting N steps is one deferral, not N)
-        self.deferred_promotions = 0
+        # Telemetry rides on the engine from construction: metric handles
+        # are no-op stubs when disabled, so every instrumentation site below
+        # runs unconditionally and the disabled hot path pays ~zero.
+        self.telemetry = Telemetry(enabled=telemetry)
+        tel = self.telemetry
+        # deferral episodes are deduped per uid (a request waiting N steps
+        # is ONE deferral, not N); the sets persist across telemetry modes
         self._deferred_uids: set = set()
+        self._deferred_pool_uids: set = set()
+        self._defer_cold = tel.defers.labels(cause="cold_promote")
         self._mesh = None
         self._mesh_rules = None
         if shard_lam:
@@ -187,6 +195,7 @@ class MultiTenantEngine:
         # tier pressure can drop a tenant without an explicit evict — its
         # prefix-cache family must be reclaimed just as eagerly
         self.registry.on_drop = lambda tenant, dg: self._drop_stale_family(dg)
+        self.registry.attach_metrics(tel.registry)
         self.scheduler = ContinuousBatchScheduler(n_lanes)
         self.n_lanes, self.max_len = n_lanes, max_len
         self.collect_logits = collect_logits
@@ -206,13 +215,18 @@ class MultiTenantEngine:
             self.max_blocks = max_len // block_size
             if n_blocks is None:
                 n_blocks = 1 + n_lanes * self.max_blocks  # dense-equivalent
-            self.allocator = BlockAllocator(n_blocks, block_size)
+            self.allocator = BlockAllocator(
+                n_blocks, block_size, metrics=tel.registry
+            )
             if not 0 <= watermark < self.allocator.capacity:
                 raise ValueError(
                     f"watermark={watermark} must be in [0, capacity={self.allocator.capacity})"
                 )
             self.watermark = watermark
-            self.prefix_cache = PrefixCache(self.allocator) if share_prefix else None
+            self.prefix_cache = (
+                PrefixCache(self.allocator, metrics=tel.registry)
+                if share_prefix else None
+            )
             self._lane_blocks: Dict[int, List[int]] = {}
             # uid → prefix blocks pinned (incref'd) at gate approval; consumed
             # by _admit_paged in the same admission round
@@ -323,6 +337,34 @@ class MultiTenantEngine:
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
 
+        # engine-level callback metrics: sampled only at snapshot() time,
+        # zero hot-path cost.  The jit compile counts hook the same
+        # ``_cache_size`` machinery the compile-count tests already use.
+        reg = tel.registry
+        reg.callback("serve_queue_depth", lambda: len(self.scheduler.queue),
+                     help="requests waiting for a decode lane")
+        reg.callback("serve_active_lanes",
+                     lambda: sum(r is not None for r in self.scheduler.lanes),
+                     help="decode lanes currently occupied")
+        reg.callback("serve_lane_capacity", lambda: self.n_lanes,
+                     help="fixed decode-lane count")
+        reg.callback("serve_steps_total", lambda: self.steps, kind="counter",
+                     help="engine decode steps executed")
+        reg.callback("serve_decoded_tokens_total",
+                     lambda: self.decoded_tokens, kind="counter",
+                     help="tokens decoded, incl. preemption re-derivation "
+                          "(serve_tokens_total is the delivered subset)")
+        reg.callback("serve_prefill_buckets",
+                     lambda: len(self.prefill_buckets),
+                     help="distinct padded prompt lengths prefilled "
+                          "(= prefill compilations under bucketing)")
+        for _n, _f in (("prefill", self._prefill), ("decode", self._decode),
+                       ("prefill_paged", self._prefill_paged)):
+            _cs = getattr(_f, "_cache_size", None)
+            if callable(_cs):
+                reg.callback(f"serve_jit_compiles_{_n}", _cs, kind="counter",
+                             help=f"compiled variants of the {_n} step")
+
     def _rules_ctx(self):
         if self._mesh is None:
             return nullcontext()
@@ -405,7 +447,9 @@ class MultiTenantEngine:
             # pin from submission (not admission): a queued request must keep
             # its tenant's slot resident until it finishes
             self.registry.pin(tenant)
-        return self.scheduler.submit(tenant, prompt, max_new_tokens)
+        req = self.scheduler.submit(tenant, prompt, max_new_tokens)
+        self.telemetry.on_submit(req)
+        return req
 
     # -- paged block accounting ---------------------------------------------
 
@@ -446,8 +490,12 @@ class MultiTenantEngine:
                         )
                     self._gate_matches[req.uid] = cached
                     reserved[0] += need
+                    self._deferred_pool_uids.discard(req.uid)
                     return True
                 if self.prefix_cache is None or not len(self.prefix_cache):
+                    if req.uid not in self._deferred_pool_uids:
+                        self._deferred_pool_uids.add(req.uid)
+                        self.telemetry.on_defer(req, "pool_full")
                     return False
                 self.prefix_cache.evict_one()
 
@@ -468,7 +516,7 @@ class MultiTenantEngine:
             if not reg.is_hot(req.tenant) and reg.promote(req.tenant) is None:
                 if req.uid not in self._deferred_uids:
                     self._deferred_uids.add(req.uid)
-                    self.deferred_promotions += 1
+                    self.telemetry.on_defer(req, "cold_promote")
                 return False
             self._deferred_uids.discard(req.uid)
             reg.pin(req.tenant)
@@ -502,6 +550,7 @@ class MultiTenantEngine:
         and kick its request to the queue front; greedy decode re-derives
         the lost tokens on re-admission."""
         lane = victim.lane
+        self.telemetry.on_preempt(victim, "block_pressure")
         for b in self._lane_blocks.pop(lane):
             self.allocator.decref(b)
         self.cache = self._reset(self.cache, lane)
@@ -518,6 +567,7 @@ class MultiTenantEngine:
         not pin per-waiter device copies of lane state (a dense attention
         lane's snapshot is its whole ``(max_len, KV, dh)`` K/V region);
         restore ships it back in one transfer."""
+        self.telemetry.on_preempt(req, "quantum")
         req.snapshot = jax.device_get(self._extract(self.cache, req.lane))
         if self._cold_tier:
             self.registry.unpin(req.tenant)  # re-pinned at re-admission
@@ -554,12 +604,15 @@ class MultiTenantEngine:
                 blocks[blk_idx] = dst
                 self.cache = self._fork_block(self.cache, req.lane, blk_idx, src, dst)
                 self.cow_forks += 1
+                self.telemetry.on_cow_fork(req, src, dst)
 
     # -- the serving loop ---------------------------------------------------
 
     def _admit(self, finished: List[Request]) -> None:
         gate = self._make_gate()
+        tel = self.telemetry
         for req in self.scheduler.admit(gate):
+            tel.on_admit(req, restored=req.snapshot is not None)
             view = self._params_view()  # after gate: promotion bumps version
             req.slot = self.registry.lookup(req.tenant)  # pinned since submit
             req.slice_steps = 0
@@ -580,6 +633,7 @@ class MultiTenantEngine:
             padded[:P] = req.prompt
             self.prefill_buckets.add(Pb)
             length = jnp.full((1,), P, jnp.int32)
+            t0 = tel.now() if tel.enabled else 0.0
             if self.paged:
                 logits = self._admit_paged(req, view, padded, seg, length)
             else:
@@ -590,7 +644,12 @@ class MultiTenantEngine:
                     view, lane_cache, jnp.asarray(padded)[None, :], seg, length
                 )
                 self.cache = self._restore(self.cache, lane_cache, req.lane)
-            self._emit(req, np.asarray(logits[0]), finished)
+            # materialize before timing: the host sync is part of the
+            # prefill cost the lane actually paid
+            row = np.asarray(logits[0])
+            if tel.enabled:
+                tel.on_prefill(req, t0, tel.now())
+            self._emit(req, row, finished)
 
     def _admit_paged(self, req: Request, view, padded, seg, length):
         """Paged admission: adopt the shared-prefix blocks the gate pinned,
@@ -630,6 +689,11 @@ class MultiTenantEngine:
             # file this prompt's full blocks for reuse (the partial tail —
             # still receiving decode writes — is never cached)
             self.prefix_cache.insert(self._family(req), req.prompt, blocks)
+            # monotonic telemetry counters tally once, post re-match — the
+            # cache's own hit/miss attrs are adjusted incrementally above
+            # but net out to the same totals
+            self.telemetry.prefix_hits.inc(len(cached))
+            self.telemetry.prefix_misses.inc(P // bs - len(cached))
         return logits
 
     def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
@@ -643,6 +707,7 @@ class MultiTenantEngine:
         # deterministic), so indexes already delivered are not re-emitted
         if len(req.tokens) > req.delivered:
             req.delivered = len(req.tokens)
+            self.telemetry.on_token(req)
             self.events.append(
                 TokenEvent(
                     uid=req.uid, tenant=req.tenant, lane=req.lane, token=tok,
@@ -650,6 +715,7 @@ class MultiTenantEngine:
                 )
             )
         if req.done:
+            self.telemetry.on_retire(req)
             lane = req.lane
             self.scheduler.finish(req)
             self.registry.unpin(req.tenant)
@@ -673,6 +739,9 @@ class MultiTenantEngine:
         this step.  Per-token events land in ``self.events``."""
         finished: List[Request] = []
         self.events = []
+        tel = self.telemetry
+        on = tel.enabled
+        t = tel.now() if on else 0.0
         if self.quantum is not None and self.scheduler.queue:
             # preempt only as many over-quantum lanes as waiters that free
             # lanes can't already absorb (counted before preemption re-queues
@@ -685,9 +754,21 @@ class MultiTenantEngine:
                 over.sort(key=lambda r: (-r.slice_steps, r.lane))
                 for req in over[:need]:
                     self._preempt_quantum(req)
+            if on:
+                now = tel.now()
+                tel.phase("quantum", now - t)
+                t = now
         self._admit(finished)
+        if on:
+            now = tel.now()
+            tel.phase("admit", now - t)
+            t = now
         if self.paged:
             self._grow_lanes()
+            if on:
+                now = tel.now()
+                tel.phase("grow", now - t)
+                t = now
         active = self.scheduler.active()
         if not active:
             return finished
@@ -696,12 +777,25 @@ class MultiTenantEngine:
             tok[req.lane, 0] = req.tokens[-1]
         seg = jnp.asarray(self.scheduler.batch_composition())
         view = self._params_view()
+        t_disp = tel.now() if on else 0.0
         logits, self.cache = self._decode(view, self.cache, jnp.asarray(tok), seg)
-        logits_np = np.asarray(logits)
+        if on:
+            now = tel.now()
+            tel.phase("dispatch", now - t_disp)
+            t = now
+        logits_np = np.asarray(logits)  # host sync: the decode really ran
+        t_sync = 0.0
+        if on:
+            t_sync = tel.now()
+            tel.phase("sync", t_sync - t)
         self.steps += 1
         for req in active:
             req.slice_steps += 1
             self._emit(req, logits_np[req.lane], finished)
+            if on:
+                tel.on_decode_lane(req, t_disp, t_sync, req.tokens[-1])
+        if on:
+            tel.phase("emit", tel.now() - t_sync)
         return finished
 
     def run(self) -> Dict[int, Request]:
@@ -745,6 +839,22 @@ class MultiTenantEngine:
         """Distinct padded prompt lengths prefilled so far — with bucketing
         this is the number of prefill compilations the engine caused."""
         return len(self.prefill_buckets)
+
+    @property
+    def deferred_promotions(self) -> int:
+        """Admissions deferred on a cold tenant, counted once per deferral
+        episode — back-compat alias of
+        ``serve_deferrals_total{cause="cold_promote"}`` (reads 0 when
+        telemetry is disabled; episode dedup itself always runs)."""
+        return int(self._defer_cold.value)
+
+    def metrics(self) -> Dict[str, Any]:
+        """JSON-able snapshot of every serving metric (``repro.obs``):
+        latency histograms (TTFT / TBT / E2E / queue-wait / step phases),
+        request / preemption / deferral / prefix-cache counters, and the
+        sampled occupancy callbacks (block pool, λ tiers, queue depth, jit
+        compile counts).  ``{}`` when telemetry is disabled."""
+        return self.telemetry.snapshot()
 
 
 # ---------------------------------------------------------------------------

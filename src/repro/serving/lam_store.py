@@ -544,6 +544,36 @@ class LamStore:
 
     # -- accounting ---------------------------------------------------------
 
+    def attach_metrics(self, registry) -> None:
+        """Expose tier occupancy and churn through a
+        :class:`~repro.obs.metrics.MetricsRegistry`.  Everything is
+        callback-sampled from the counters/containers the store already
+        maintains — attaching metrics adds zero work to the
+        register/promote/evict paths."""
+        cb = registry.callback
+        cb("lam_hot_slots_in_use", lambda: len(self._slots) - 1,
+           help="hot-tier λ slots holding a tenant (base slot 0 excluded)")
+        cb("lam_hot_slots_capacity", lambda: self.hot_capacity,
+           help="usable hot-tier λ slots")
+        cb("lam_cold_tenants", lambda: len(self._cold),
+           help="tenants resident in the host cold tier")
+        cb("lam_cold_capacity", lambda: self.cold_slots,
+           help="host cold-tier capacity (tenants)")
+        cb("lam_table_bytes", self.table_bytes,
+           help="device bytes of the packed hot-tier λ tables")
+        cb("lam_cold_bytes", self.cold_bytes,
+           help="host bytes currently held by the cold tier")
+        cb("lam_spills_total", lambda: self.spills, kind="counter",
+           help="hot → cold λ demotions")
+        cb("lam_promotes_total", lambda: self.promotes, kind="counter",
+           help="cold → hot λ promotions")
+        cb("lam_cold_registers_total", lambda: self.cold_registers,
+           kind="counter", help="registers that landed directly in the cold tier")
+        cb("lam_lru_drops_total", lambda: self.lru_drops, kind="counter",
+           help="tenants dropped from the store by tier pressure")
+        cb("lam_slot_writes_total", lambda: self.slot_writes, kind="counter",
+           help="donated device slot writes (register/spill/evict/promote)")
+
     @property
     def hot_capacity(self) -> int:
         """Usable hot slots (excludes the reserved base slot 0)."""

@@ -42,6 +42,8 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import NULL
+
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation cannot be satisfied from the free list."""
@@ -49,9 +51,15 @@ class PoolExhausted(RuntimeError):
 
 class BlockAllocator:
     """Ref-counted free list over ``n_blocks`` KV blocks; block 0 reserved
-    for trash (never allocated, never freed, never shared)."""
+    for trash (never allocated, never freed, never shared).
 
-    def __init__(self, n_blocks: int, block_size: int):
+    With a ``metrics`` registry, pool occupancy is tracked as gauges
+    (``kv_pool_blocks_in_use`` / ``kv_pool_blocks_peak``) updated on
+    **every** alloc/free — the footprint numbers are exact, not dependent
+    on when a benchmark happens to sample them.  ``peak_in_use`` stays as
+    a plain attribute fed by the same bookkeeping."""
+
+    def __init__(self, n_blocks: int, block_size: int, *, metrics=None):
         if n_blocks < 2:
             raise ValueError("need block 0 (trash) plus at least one usable block")
         if block_size < 1:
@@ -62,6 +70,28 @@ class BlockAllocator:
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
         self._refs: Dict[int, int] = {}
         self.peak_in_use = 0  # high-water mark of blocks out of the free list
+        self._g_in_use = self._g_peak = NULL
+        if metrics is not None:
+            self.attach_metrics(metrics)
+
+    def attach_metrics(self, registry) -> None:
+        """Wire pool occupancy into a :class:`~repro.obs.metrics.
+        MetricsRegistry` (no-op instruments when the registry is disabled)."""
+        self._g_in_use = registry.gauge(
+            "kv_pool_blocks_in_use", "KV pool blocks out of the free list")
+        self._g_peak = registry.gauge(
+            "kv_pool_blocks_peak", "high-water mark of KV pool blocks in use")
+        registry.callback(
+            "kv_pool_blocks_capacity", lambda: self.capacity,
+            help="usable KV pool blocks (excludes the trash block)")
+
+    def _track(self) -> None:
+        """Occupancy bookkeeping after any alloc/free transition."""
+        n = self.n_in_use
+        if n > self.peak_in_use:
+            self.peak_in_use = n
+        self._g_in_use.set(n)
+        self._g_peak.set(self.peak_in_use)
 
     # -- capacity -----------------------------------------------------------
 
@@ -114,6 +144,7 @@ class BlockAllocator:
         if n == 1:
             del self._refs[b]
             self._free.append(b)
+            self._track()
             return True
         self._refs[b] = n - 1
         return False
@@ -132,7 +163,7 @@ class BlockAllocator:
         ids = [self._free.pop() for _ in range(n)]
         for b in ids:
             self._refs[b] = 1
-        self.peak_in_use = max(self.peak_in_use, self.n_in_use)
+        self._track()
         return ids
 
     def free(self, ids: Sequence[int]) -> None:
@@ -176,7 +207,7 @@ class PrefixCache:
     keeps receiving decode writes and stays private to its lane.
     """
 
-    def __init__(self, allocator: BlockAllocator):
+    def __init__(self, allocator: BlockAllocator, *, metrics=None):
         self.allocator = allocator
         self.block_size = allocator.block_size
         # key → block id, LRU order (least-recently-used first)
@@ -188,6 +219,22 @@ class PrefixCache:
         self._by_seed: Dict[bytes, "OrderedDict[bytes, None]"] = {}
         self.hits = 0  # blocks reused across all matches
         self.misses = 0  # full blocks prefilled that were not cached
+        if metrics is not None:
+            self.attach_metrics(metrics)
+
+    def attach_metrics(self, registry) -> None:
+        """Sampled occupancy/efficacy metrics (resolved at snapshot time,
+        nothing on the match/insert path)."""
+        registry.callback(
+            "kv_prefix_cached_blocks", lambda: len(self._entries),
+            help="prefix-cache entries currently holding a block reference")
+        registry.callback(
+            "kv_prefix_hit_rate", self.hit_rate,
+            help="blocks adopted from the cache / full blocks requested")
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -38,6 +38,10 @@ class Request:
     # set, re-admission restores the lane instead of re-prefilling — exact
     # for recurrent state (O(1) per lane) and dense KV lanes alike.
     snapshot: Any = None
+    # telemetry span (``repro.obs.tracing.RequestTrace``): milestone log of
+    # this request's submit→admit→prefill→decode→preempt/retire lifecycle,
+    # attached at submission when the engine's telemetry is enabled.
+    trace: Any = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
 
