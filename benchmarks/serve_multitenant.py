@@ -8,9 +8,11 @@ paged-vs-dense KV cache HBM footprint under short-prompt traffic (the
 regime where a dense ``(lanes, max_len)`` region is nearly all slack), the
 copy-on-write prefix-sharing block footprint when N tenants of one
 family serve a common prompt (the regime the QR-LoRA pitch targets: tenants
-differ by ~600 λ scalars, their system preamble dominates KV HBM), and the
-recurrent-family decode paths (xlstm-only and jamba hybrid batches) that
-join the shared loop through the LaneState protocol.
+differ by ~600 λ scalars, their system preamble dominates KV HBM), the
+chunked-prefill tail-latency split (resident lanes' inter-token gap with a
+long prompt admitted monolithically vs streamed through the per-step chunk
+budget), and the recurrent-family decode paths (xlstm-only and jamba hybrid
+batches) that join the shared loop through the LaneState protocol.
 """
 from __future__ import annotations
 
@@ -23,7 +25,13 @@ import numpy as np
 from benchmarks.common import SCALE, emit
 from repro.configs import get_config, get_reduced
 from repro.kernels import ref
-from repro.serving import BASE_TENANT, LamStore, MultiTenantEngine, random_lambda
+from repro.serving import (
+    BASE_TENANT,
+    EngineConfig,
+    LamStore,
+    MultiTenantEngine,
+    random_lambda,
+)
 
 
 def bench_engine_throughput():
@@ -37,18 +45,21 @@ def bench_engine_throughput():
             f"serve_multitenant:engine:tenants={n_tenants}",
             dt / max(eng.steps, 1) * 1e6,
             f"tok_s={eng.decoded_tokens/dt:.0f};lanes={lanes};"
-            f"bytes_per_tenant={eng.registry.bytes_per_tenant()}",
+            f"bytes_per_tenant={eng.lam_store.bytes_per_tenant()}",
         )
 
 
-def _drive_engine(arch, *, n_tenants, lanes, prompt_len, gen, max_len, **engine_kw):
+def _drive_engine(arch, *, n_tenants, lanes, prompt_len, gen, max_len, **config_kw):
     """Shared harness: build an engine, register ``n_tenants`` distinct-λ
     tenants (tenant 0 = base), submit one request per lane round-robin over
     the tenants, and drain.  Returns (engine, wall-clock seconds)."""
     cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
     eng = MultiTenantEngine(
-        cfg, n_lanes=lanes, n_slots=max(8, n_tenants + 1), max_len=max_len,
-        **engine_kw,
+        cfg,
+        EngineConfig(
+            n_lanes=lanes, n_slots=max(8, n_tenants + 1), max_len=max_len,
+            **config_kw,
+        ),
     )
     tenants = [BASE_TENANT]
     for i in range(1, n_tenants):
@@ -73,7 +84,7 @@ def bench_recurrent_families():
     attention families."""
     cases = (
         ("xlstm-125m", "ssm", {}),
-        ("jamba-1.5-large-398b", "hybrid", dict(paged=True, block_size=8)),
+        ("jamba-1.5-large-398b", "hybrid", dict(layout="paged", block_size=8)),
     )
     lanes, gen, prompt_len, max_len = (4, 8, 9, 32) if SCALE != "paper" else (8, 32, 32, 128)
     for arch, fam, kw in cases:
@@ -225,12 +236,14 @@ def bench_paged_vs_dense():
     results = {}
     per_req_blocks = -(-(max(prompt_lens) + gen) // bs)
     for mode, kw in (
-        ("dense", {}),
+        ("dense", dict(layout="oracle_dense")),
         # pool holds every lane's worst-case active request + trash block
-        ("paged", dict(paged=True, block_size=bs,
+        ("paged", dict(layout="paged", block_size=bs,
                        n_blocks=1 + lanes * per_req_blocks)),
     ):
-        eng = MultiTenantEngine(cfg, n_lanes=lanes, n_slots=8, max_len=max_len, **kw)
+        eng = MultiTenantEngine(
+            cfg, EngineConfig(n_lanes=lanes, n_slots=8, max_len=max_len, **kw)
+        )
         eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.1))
         tenants = [BASE_TENANT, "t1"]
         for i, prompt in enumerate(prompts):
@@ -284,8 +297,11 @@ def bench_prefix_sharing():
     peaks = {}
     for mode, share in (("unshared", False), ("shared", True)):
         eng = MultiTenantEngine(
-            cfg, n_lanes=lanes, n_slots=max(8, lanes + 1), max_len=max_len,
-            paged=True, block_size=bs, share_prefix=share,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=lanes, n_slots=max(8, lanes + 1),
+                max_len=max_len, block_size=bs, share_prefix=share,
+            ),
         )
         fam = random_lambda(jax.random.PRNGKey(1), eng.params, 0.1)
         for i in range(lanes):
@@ -321,6 +337,58 @@ def bench_prefix_sharing():
         f"unshared_peak={peaks['unshared']};shared_peak={peaks['shared']};"
         f"ratio={peaks['unshared'] / max(peaks['shared'], 1):.2f}x",
     )
+
+
+def bench_chunked_prefill():
+    """Chunked prefill A/B: tail latency of *resident* decoders while long
+    prompts admit.  Short requests decode first; long prompts are submitted
+    mid-stream, so a monolithic admission prefill stalls every resident
+    lane for the whole prompt, while the chunked engine amortizes it at
+    ``prefill_chunk`` tokens per step.  The gated value is mean step time;
+    the TBT datum (resident lanes' worst token gap) is the knob's point."""
+    arch = "smollm-135m"
+    cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
+    if SCALE != "paper":
+        lanes, bs, chunk, max_len = 2, 16, 32, 128
+        short, long_p, gen_s, gen_l = 16, 96, 24, 8
+    else:
+        lanes, bs, chunk, max_len = 4, 16, 64, 512
+        short, long_p, gen_s, gen_l = 32, 384, 96, 32
+    rng = np.random.default_rng(0)
+    for mode, pc in (("off", None), ("on", chunk)):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=lanes, n_slots=8, max_len=max_len,
+                block_size=bs, prefill_chunk=pc,
+            ),
+        )
+        for _ in range(lanes):
+            eng.submit(
+                BASE_TENANT,
+                rng.integers(2, cfg.vocab_size, size=short).astype(np.int32),
+                gen_s,
+            )
+        t0 = time.time()
+        for _ in range(4):
+            eng.step()  # residents decoding before the long prompts land
+        for _ in range(lanes):
+            eng.submit(
+                BASE_TENANT,
+                rng.integers(2, cfg.vocab_size, size=long_p).astype(np.int32),
+                gen_l,
+            )
+        eng.run()
+        dt = time.time() - t0
+        tel = eng.telemetry
+        emit(
+            f"serve_multitenant:chunked_prefill:{mode}",
+            dt / max(eng.steps, 1) * 1e6,
+            f"tbt_p95_ms={tel.tbt.quantile(0.95):g};"
+            f"tbt_mean_ms={tel.tbt.mean:.2f};"
+            f"ttft_p95_ms={tel.ttft.quantile(0.95):g};"
+            f"chunk={pc};long_prompt={long_p};lanes={lanes}",
+        )
 
 
 def bench_telemetry_overhead():
@@ -360,9 +428,9 @@ def bench_decode_phases():
     block-table K/V gather, the full paged attention (gather + masked
     attend), and the batched multi-λ adapter matmul, each jitted and timed
     in isolation.  Complements the host-side ``host_phase_ms`` split in
-    ``bench_paged_vs_dense``: ROADMAP item 1 (the paged layout must reach
-    dense throughput) needs to know whether the gap is the gather, the
-    attend, or adapter overhead before a fused kernel is worth writing."""
+    ``bench_paged_vs_dense``: with the fused multi-block decode kernel on
+    the TPU path, these numbers say whether a regression is the gather,
+    the attend, or adapter overhead."""
     if SCALE != "paper":
         lanes, bs, max_blocks, H, KV, dh = 4, 16, 32, 8, 4, 64
     else:
@@ -419,6 +487,7 @@ def main():
     bench_bgmv_overhead()
     bench_engine_throughput()
     bench_recurrent_families()
+    bench_chunked_prefill()
     bench_telemetry_overhead()
     bench_decode_phases()
     bench_paged_vs_dense()

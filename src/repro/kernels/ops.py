@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.paged_attention import paged_decode_attention_kernel
@@ -157,11 +158,21 @@ def decode_attention(q, k_cache, v_cache, length, *, bk: int = 512):
 
 def paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths):
     """q (B,1,H,dh) or (B,H,dh); pools (n_blocks, bs, KV, dh); block_tbl
-    (B, max_blocks) int32; lengths (B,) int32 → same rank as q."""
+    (B, max_blocks) int32; lengths (B,) int32 → same rank as q.
+
+    On TPU this runs the fused multi-block Pallas kernel; off-TPU it runs
+    the XLA gather reference instead of the kernel's interpret mode — the
+    two are bit-identical (asserted in tests/test_paging.py) and interpret
+    mode emulates the double-buffered DMA schedule step by step, which is
+    exactly the wrong thing to pay for on a CPU smoke run.  Callers must
+    pass ``lengths >= 1`` (the engine always does: the current position is
+    valid); the reference's all-masked softmax would NaN on a zero.
+    """
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
-    o = paged_decode_attention_kernel(
-        q, k_pool, v_pool, block_tbl, lengths, interpret=not _on_tpu()
-    )
+    if _on_tpu():
+        o = paged_decode_attention_kernel(q, k_pool, v_pool, block_tbl, lengths)
+    else:
+        o = ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths)
     return o[:, None] if squeeze else o

@@ -1,25 +1,35 @@
-"""Paged decode-attention Pallas kernel: one query position vs a block-table
-KV cache.
+"""Fused paged decode-attention Pallas kernel: one launch per decode step.
 
-The dense decode kernel streams a per-lane ``(max_len, KV, dh)`` cache
-region; here K/V live in one global block pool shared by all lanes
+The previous kernel put ``(lane, block)`` on the grid and let the BlockSpec
+index map pull one pool block per grid cell — correct, but every block costs
+a grid step and the online-softmax state lives in scratch between cells.
+This version fuses the whole lane into **one grid cell**: the block table
+and per-lane lengths ride as scalar-prefetch operands, the K/V pools stay
+in HBM (``memory_space=ANY``), and the kernel walks the lane's table itself,
+streaming pool blocks through VMEM with double-buffered async DMA
 
-    k/v pool : (n_blocks, bs, KV, dh)
+    k/v pool : (n_blocks, bs, KV, dh)   — stays in HBM
+    strip    : (2, bs, KV, dh)          — VMEM landing slots (the DMA window)
+    gather   : (max_blocks·bs, KV, dh)  — VMEM-resident gathered lane view
 
-and each lane owns ``ceil(len/bs)`` pool blocks named by its block table.
-The table and the per-lane lengths ride as *scalar-prefetch* operands
-(:class:`pltpu.PrefetchScalarGridSpec`), so the BlockSpec index map can
-steer the pool DMA through the table: grid cell ``(b, i)`` pulls pool block
-``tbl[b, i]`` into VMEM — logical block ``i`` of lane ``b`` — and folds it
-into the online softmax.  Blocks past the lane's length are skipped
-(``pl.when``), so short lanes cost HBM reads proportional to their actual
-length, not ``max_len``.
+so a decode step is one kernel launch per batch instead of a pool gather
+materialized in HBM plus a dense attend.  While strips land, the kernel
+accumulates the running row-max online (max is exact, so blockwise
+accumulation is bit-identical to a flat reduction); the exponentiation,
+normalization and PV contraction run as a single fused epilogue over the
+VMEM-resident strip at full table width — the same reduction shapes as
+:func:`repro.kernels.ref.paged_decode_attention_ref`, which keeps the
+kernel bit-identical to the oracle (asserted in tests, not just allclose).
 
-All H query heads of a lane are processed per grid cell so each KV block is
-read once for the whole GQA group (H/KV heads share it), same as the dense
-decode kernel.
+Blocks past a lane's length still stream (the table is trash/stale there —
+pool reads are cheap and keep the DMA pipeline regular) but their scores
+are masked before the softmax, so trash and stale table entries cannot
+contribute.  Callers bound the *table width* instead: the engine slices the
+table to the active-lane block high-water mark (``attend_blocks``), so HBM
+traffic tracks the longest live lane, not ``max_len``.
 
-grid = (B, max_blocks);  VMEM ≈ H·dh (q) + 2·bs·KV·dh (kv) + H·bs (scores).
+grid = (B,);  VMEM ≈ H·dh (q) + (2 + max_blocks)·bs·KV·dh (strips + gather)
++ H·max_blocks·bs (scores).
 """
 from __future__ import annotations
 
@@ -33,51 +43,73 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import CompilerParams
 
 _NEG = -1e30
+_LOOKAHEAD = 2  # DMA double-buffering depth (outstanding copies per pool)
 
 
 def _kernel(
-    tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, scale, bs, n_i, rep,
+    tbl_ref, len_ref, q_ref, k_hbm, v_hbm, o_ref,
+    k_strip, v_strip, k_gather, v_gather, scores, sem,
+    *, scale, bs, max_blocks, rep,
 ):
-    b, i = pl.program_id(0), pl.program_id(1)
-
-    @pl.when(i == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+    b = pl.program_id(0)
     length = len_ref[b]
+    q = q_ref[0]  # (H, dh)
+    H, dh = q.shape
+    KV = k_strip.shape[2]
 
-    @pl.when(i * bs < length)
-    def _block():
-        q = q_ref[0]  # (H, dh)
-        k = k_ref[0]  # (bs, KV, dh)
-        v = v_ref[0]
-        H, dh = q.shape
-        KV = k.shape[1]
-        # GQA: expand kv → per-query-head scores without repeating in HBM
-        qg = q.reshape(KV, rep, dh)
-        s = jnp.einsum("gri,kgi->grk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    def k_dma(i):
+        return pltpu.make_async_copy(
+            k_hbm.at[tbl_ref[b, i]], k_strip.at[jax.lax.rem(i, _LOOKAHEAD)],
+            sem.at[jax.lax.rem(i, _LOOKAHEAD), 0])
+
+    def v_dma(i):
+        return pltpu.make_async_copy(
+            v_hbm.at[tbl_ref[b, i]], v_strip.at[jax.lax.rem(i, _LOOKAHEAD)],
+            sem.at[jax.lax.rem(i, _LOOKAHEAD), 1])
+
+    k_dma(0).start()
+    v_dma(0).start()
+
+    qg = q.reshape(KV, rep, dh).astype(jnp.float32)
+
+    def body(i, m):
+        # start the next strip into the other slot (consumed last iteration)
+        # while this one finishes — the classic two-slot pipeline
+        @pl.when(i + 1 < max_blocks)
+        def _prefetch():
+            k_dma(i + 1).start()
+            v_dma(i + 1).start()
+
+        k_dma(i).wait()
+        v_dma(i).wait()
+        slot = jax.lax.rem(i, _LOOKAHEAD)
+        k = k_strip[slot]  # (bs, KV, dh)
+        k_gather[pl.ds(i * bs, bs)] = k
+        v_gather[pl.ds(i * bs, bs)] = v_strip[slot]
+        # score this strip while the next one is in flight; the running max
+        # is exact under any association, so accumulating it online is
+        # bit-identical to the oracle's flat reduction
+        s = jnp.einsum("gri,kgi->grk", qg, k.astype(jnp.float32))
         s = (s * scale).reshape(H, bs)
         kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (H, bs), 1)
         s = jnp.where(kpos < length, s, _NEG)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)  # (H, bs)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
-        pv = jnp.einsum(
-            "grk,kgi->gri",
-            p.reshape(KV, rep, bs),
-            v.astype(jnp.float32),
-        ).reshape(H, dh)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = m_new
+        scores[:, pl.ds(i * bs, bs)] = s
+        return jnp.maximum(m, s.max(axis=1, keepdims=True))
 
-    @pl.when(i == n_i - 1)
-    def _emit():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+    m0 = jnp.full((H, 1), _NEG, jnp.float32)
+    m = jax.lax.fori_loop(0, max_blocks, body, m0)
+
+    # fused epilogue at full table width — reduction shapes match the oracle
+    s = scores[...]  # (H, W) fp32, masked
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=1, keepdims=True)
+    # the PV contraction broadcasts V to H heads first — same operand shapes
+    # as the oracle's repeated-head einsum, so the k-axis summation
+    # associates identically (the grouped form differs by an ulp at W=512)
+    v = jnp.repeat(v_gather[...], rep, axis=1)  # (W, H, dh)
+    o = jnp.einsum("hk,khd->hd", p.astype(v.dtype), v)
+    # empty lanes (idle slots the engine discards) emit zeros, not NaN
+    o_ref[0] = jnp.where(length > 0, o, 0.0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -96,27 +128,28 @@ def paged_decode_attention_kernel(
     rep = H // KV
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # block_tbl, lengths
-        grid=(B, max_blocks),
+        grid=(B,),
         in_specs=[
-            pl.BlockSpec((1, H, dh), lambda b, i, tbl, lens: (b, 0, 0)),
-            pl.BlockSpec((1, bs, KV, dh), lambda b, i, tbl, lens: (tbl[b, i], 0, 0, 0)),
-            pl.BlockSpec((1, bs, KV, dh), lambda b, i, tbl, lens: (tbl[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, H, dh), lambda b, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
         ],
-        out_specs=pl.BlockSpec((1, H, dh), lambda b, i, tbl, lens: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, tbl, lens: (b, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((H, 1), jnp.float32),
-            pltpu.VMEM((H, 1), jnp.float32),
-            pltpu.VMEM((H, dh), jnp.float32),
+            pltpu.VMEM((_LOOKAHEAD, bs, KV, dh), k_pool.dtype),
+            pltpu.VMEM((_LOOKAHEAD, bs, KV, dh), v_pool.dtype),
+            pltpu.VMEM((max_blocks * bs, KV, dh), k_pool.dtype),
+            pltpu.VMEM((max_blocks * bs, KV, dh), v_pool.dtype),
+            pltpu.VMEM((H, max_blocks * bs), jnp.float32),
+            pltpu.SemaphoreType.DMA((_LOOKAHEAD, 2)),
         ],
     )
     return pl.pallas_call(
         functools.partial(
-            _kernel, scale=dh**-0.5, bs=bs, n_i=max_blocks, rep=rep
+            _kernel, scale=dh**-0.5, bs=bs, max_blocks=max_blocks, rep=rep
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(block_tbl.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

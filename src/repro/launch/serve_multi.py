@@ -10,11 +10,14 @@ token-for-token and logit-for-logit.
 
 Every decode-capable family serves through the same loop (LaneState
 protocol): ``--arch smollm-135m`` (dense attention), ``--arch
-jamba-1.5-large-398b`` (hybrid: paged attention + dense Mamba state with
-``--paged``), ``--arch xlstm-125m`` (pure recurrent; no KV to page, so
-``--paged`` is rejected).  Family-specific knobs: ``--paged`` /
-``--share-prefix`` / ``--watermark`` need attention layers; ``--quantum``
-(time-slice fairness via lane-state snapshots) needs the dense layout and
+jamba-1.5-large-398b`` (hybrid: paged attention + dense Mamba state),
+``--arch xlstm-125m`` (pure recurrent; no KV to page, so ``--layout
+paged`` is rejected — ``--layout auto``, the default, picks the dense
+oracle layout for it).  CLI flags map 1:1 onto
+:class:`repro.serving.EngineConfig` fields: ``--layout`` / ``--block-size``
+/ ``--n-blocks`` / ``--share-prefix`` / ``--watermark`` /
+``--prefill-chunk`` configure the paged layout; ``--quantum`` (time-slice
+fairness via lane-state snapshots) needs the dense oracle layout and
 shines for recurrent families whose per-lane state is O(1).
 
     PYTHONPATH=src python -m repro.launch.serve_multi --reduced --tenants 4
@@ -33,6 +36,7 @@ from repro.configs import get_config, get_reduced
 from repro.obs import write_metrics
 from repro.serving import (
     BASE_TENANT,
+    EngineConfig,
     MultiTenantEngine,
     base_lambda,
     random_lambda,
@@ -53,9 +57,15 @@ def main(argv=None):
     ap.add_argument("--lam-scale", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
+        "--layout", default="auto", choices=["auto", "paged", "oracle_dense"],
+        help="KV-cache layout (EngineConfig.layout): 'paged' = block pool + "
+        "per-lane block tables (the serving layout), 'oracle_dense' = the "
+        "dense (lanes, max_len) reference region, 'auto' = paged whenever "
+        "the family has attention layers to page (default)",
+    )
+    ap.add_argument(
         "--paged", action="store_true",
-        help="paged KV cache: block pool + per-lane block tables instead of "
-        "the dense (lanes, max_len) region",
+        help="deprecated alias of --layout paged",
     )
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument(
@@ -64,8 +74,15 @@ def main(argv=None):
     )
     ap.add_argument(
         "--share-prefix", action="store_true",
-        help="copy-on-write prefix sharing (requires --paged): requests "
+        help="copy-on-write prefix sharing (paged layouts): requests "
         "repeating a prompt prefix reuse its resident KV blocks",
+    )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=None, metavar="TOKENS",
+        help="chunked prefill (paged layouts): split long prompts into "
+        "chunks of this many tokens, processed interleaved with resident "
+        "lanes' decode so TBT stays bounded (must be a multiple of "
+        "--block-size; default: monolithic admission prefill)",
     )
     ap.add_argument(
         "--watermark", type=int, default=0,
@@ -122,14 +139,15 @@ def main(argv=None):
 
     cfg = (get_reduced if args.reduced else get_config)(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
-    if args.paged and cfg.family == "ssm":
+    layout = "paged" if args.paged else args.layout
+    if layout == "paged" and cfg.family == "ssm":
         ap.error(
-            f"--paged: family {cfg.family!r} ({cfg.name}) has no attention "
-            "layers to page — its per-lane state is already O(1); drop "
-            "--paged (and consider --quantum for fairness)"
+            f"--layout paged: family {cfg.family!r} ({cfg.name}) has no "
+            "attention layers to page — its per-lane state is already O(1); "
+            "use --layout auto (and consider --quantum for fairness)"
         )
-    if args.quantum is not None and args.paged:
-        ap.error("--quantum needs the dense layout; drop --paged")
+    if args.quantum is not None and layout == "paged":
+        ap.error("--quantum needs the dense oracle layout; drop --layout paged")
     # the driver submits for every tenant it registers, so the *store* must
     # hold them all at once: without a cold tier that means one hot slot
     # each (LRU eviction is exercised in tests/test_serving); with one, the
@@ -144,14 +162,13 @@ def main(argv=None):
             f"--tenants {args.tenants} exceeds hot+cold capacity "
             f"({n_slots - 1} + {args.cold_slots}); raise --cold-slots"
         )
-    engine = MultiTenantEngine(
-        cfg,
+    econf = EngineConfig(
+        layout=layout,
         n_lanes=args.lanes,
         n_slots=n_slots,
         max_len=args.max_len,
         collect_logits=not args.no_verify,
         seed=args.seed,
-        paged=args.paged,
         block_size=args.block_size,
         n_blocks=args.n_blocks,
         share_prefix=args.share_prefix,
@@ -160,9 +177,11 @@ def main(argv=None):
         cold_slots=args.cold_slots,
         shard_lam=args.shard_lam,
         telemetry=not args.no_telemetry,
+        prefill_chunk=args.prefill_chunk,
     )
-    print(f"[serve_multi] family={cfg.family} layout={'paged' if args.paged else 'dense'}")
-    reg = engine.registry
+    engine = MultiTenantEngine(cfg, econf)
+    print(f"[serve_multi] family={cfg.family} layout={engine.layout}")
+    reg = engine.lam_store
     if args.shard_lam:
         import jax as _jax
         print(
@@ -177,11 +196,12 @@ def main(argv=None):
             f"({reg.table_bytes()} B HBM) cold={args.cold_slots} tenants "
             f"(≤{reg.bytes_per_tenant() * args.cold_slots} B host)"
         )
-    if args.paged:
+    if engine.paged:
         print(
             f"[serve_multi] paged KV: block_size={args.block_size} "
             f"pool={engine.allocator.capacity} blocks "
             f"share_prefix={args.share_prefix} watermark={args.watermark} "
+            f"prefill_chunk={args.prefill_chunk} "
             f"cache_bytes={engine.kv_cache_bytes()}"
         )
 
@@ -195,7 +215,7 @@ def main(argv=None):
         engine.add_tenant(name, lams[name])
     print(
         f"[serve_multi] arch={cfg.name} tenants={args.tenants} lanes={args.lanes} "
-        f"slots={n_slots} bytes/tenant={engine.registry.bytes_per_tenant()}"
+        f"slots={n_slots} bytes/tenant={engine.lam_store.bytes_per_tenant()}"
     )
 
     rng = np.random.default_rng(args.seed)
@@ -232,7 +252,7 @@ def main(argv=None):
             f"{engine.deferred_promotions} deferred admissions, "
             f"cold_bytes={reg.cold_bytes()}"
         )
-    if args.paged:
+    if engine.paged:
         msg = (
             f"[serve_multi] pool peak={engine.allocator.peak_in_use}/"
             f"{engine.allocator.capacity} blocks, "

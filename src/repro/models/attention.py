@@ -164,6 +164,7 @@ def attention(
     causal: bool = True,
     cache: Optional[Dict] = None,
     cross_kv: Optional[jax.Array] = None,
+    attend_blocks: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (output (B,S,d), updated cache or None).
 
@@ -171,6 +172,11 @@ def attention(
     * ``cache`` with ``S > 1``      — prefill: fills the cache.
     * ``cache`` with ``S == 1``     — decode: reads + appends one position.
     * ``cross_kv``                  — cross-attention (no cache, no rope).
+
+    ``attend_blocks`` (static) bounds the paged decode attend to the first
+    that-many block-table columns — the engine passes the active lanes'
+    block high-water mark so attend cost tracks live sequence lengths, not
+    ``max_len`` (bit-identical: masked tail columns contribute exact zeros).
     """
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     B, S = x.shape[:2]
@@ -188,8 +194,10 @@ def attention(
     if cache is not None and not is_cross:
         if "block_tbl" in cache:  # paged KV cache (block pool + table)
             if S != 1:  # block-aligned prefill: scatter straight into pool blocks
-                return _paged_prefill(p, q, k, v, cache, cfg, adp, scale, sdt)
-            return _paged_decode(p, q, k, v, cache, cfg, adp, scale, sdt)
+                return _paged_prefill(p, q, k, v, cache, cfg, adp, scale, sdt, positions)
+            return _paged_decode(
+                p, q, k, v, cache, cfg, adp, scale, sdt, attend_blocks
+            )
         if S == 1:  # decode
             nm = _decode_shard_names(cfg)
             idx = cache["idx"]
@@ -230,24 +238,37 @@ def attention(
     return shard(o, "batch", None, None), new_cache
 
 
-def _paged_prefill(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
+def _paged_prefill(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt, positions):
     """Block-aligned prefill against a paged cache.
 
     ``cache`` is a prompt-shaped view (``transformer.paged_prefill_view``):
-    ``k``/``v`` are the shared pools and ``block_tbl`` (B, ceil(S/bs)) names
-    this prompt's *write targets* per block — freshly allocated private
-    blocks, or trash block 0 for positions whose K/V is already resident
-    (shared prefix blocks) and for bucket padding.  Attention itself is the
-    plain causal pass over the (bucketed) prompt, bit-identical to the dense
-    prefill path; only the cache write changes: position ``j`` of lane ``b``
-    scatters to ``pool[tbl[b, j // bs], j % bs]`` instead of a dense
-    ``(max_len,)`` lane region that the engine would re-splice.
+    ``k``/``v`` are the shared pools and ``block_tbl`` names this pass's
+    *write targets* per block — freshly allocated private blocks, or trash
+    block 0 standing in for already-resident shared prefix blocks and for
+    bucket padding.  ``positions`` are the *absolute* sequence positions of
+    this pass's rows: ``arange(S)`` for a whole-prompt prefill, or
+    ``start + arange(chunk)`` for one chunk of a chunked prefill.  Position
+    ``t`` of lane ``b`` scatters to ``pool[tbl[b, t // bs], t % bs]``
+    instead of a dense ``(max_len,)`` lane region the engine would
+    re-splice.
+
+    Without ``read_tbl`` in the view, attention is the plain causal pass
+    over the (bucketed) prompt — bit-identical to the dense prefill path.
+    With it (chunked prefill), the keys are *gathered back from the pool*
+    through ``read_tbl`` (full prompt-bucket width) after the scatter, so a
+    chunk attends to every earlier chunk's K/V — including prefix-cache
+    blocks whose K/V was never recomputed — under the absolute causal mask
+    ``kpos <= positions``.  The scatter-then-gather round-trip returns the
+    chunk's own K/V bit-identically (pool dtype == compute dtype) and the
+    gather width equals the monolithic bucket, so the softmax reduces over
+    identical score vectors and chunked prefill is bit-identical to
+    monolithic prefill, row for row.
     """
     B, S, H, dh = q.shape
     n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
     tbl = cache["block_tbl"]
 
-    pos = jnp.arange(S)
+    pos = positions.astype(jnp.int32)
     blk = jnp.take_along_axis(tbl, jnp.broadcast_to(pos // bs, (B, S)), axis=1)
     flat = (blk * bs + pos[None, :] % bs).reshape(-1)  # (B·S,)
     kp = cache["k"].reshape(n_blocks * bs, *cache["k"].shape[2:])
@@ -261,7 +282,17 @@ def _paged_prefill(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
         "idx": jnp.full_like(cache["idx"], S),  # true length overrides in decoder_prefill
     }
 
-    if S > _CHUNK_THRESHOLD:
+    read_tbl = cache.get("read_tbl")
+    if read_tbl is not None:  # chunked prefill: attend through the pool
+        new_cache["read_tbl"] = read_tbl
+        W = read_tbl.shape[1] * bs
+        kg = kp.reshape(cache["k"].shape)[read_tbl].reshape(B, W, *kp.shape[1:])
+        vg = vp.reshape(cache["v"].shape)[read_tbl].reshape(B, W, *vp.shape[1:])
+        mask = (jnp.arange(W)[None, :] <= pos[:, None])[None, None, None]
+        out = _softmax_attend(
+            q, kg.astype(q.dtype), vg.astype(q.dtype), mask, scale, scores_dtype=sdt
+        )
+    elif S > _CHUNK_THRESHOLD:
         out = _attend_chunked(q, k, v, scale, causal=True, scores_dtype=sdt)
     else:
         mask = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
@@ -270,7 +301,8 @@ def _paged_prefill(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
     return shard(o, "batch", None, None), new_cache
 
 
-def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
+def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt,
+                  attend_blocks: Optional[int] = None):
     """One decode step against a paged KV cache.
 
     ``cache``: ``k``/``v`` pools (n_blocks, bs, KV, dh), ``block_tbl``
@@ -278,6 +310,14 @@ def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
     token ``t`` lives at ``pool[block_tbl[b, t // bs], t % bs]``; idle lanes
     point at trash block 0 (never allocated) so the shared scatter needs no
     per-lane branching.
+
+    ``attend_blocks`` (static, from the engine's active-lane high-water
+    mark) truncates the *attend* to the table's first columns so the
+    gather/kernel cost is O(longest live lane), not O(max_len).  Writes
+    still go through the full table.  Lanes whose ``idx`` exceeds the bound
+    (idle lanes carrying stale offsets) get garbage outputs the engine
+    discards; live lanes are bit-identical because a masked softmax column
+    contributes exactly zero at any width.
     """
     B = q.shape[0]
     H, dh = cfg.n_heads, cfg.d_head
@@ -304,14 +344,19 @@ def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt):
 
     # -- attend through the block table -------------------------------------
     lengths = idx + 1  # current position is valid
+    a_blocks = max_blocks
+    if attend_blocks is not None and attend_blocks < max_blocks:
+        a_blocks = max(attend_blocks, 1)
+        tbl = tbl[:, :a_blocks]
+        lengths = jnp.minimum(lengths, a_blocks * bs)
     if cfg.attn_impl == "pallas":
         from repro.kernels import ops as kernel_ops
 
         out = kernel_ops.paged_decode_attention(q, kp, vp, tbl, lengths)
     else:
-        kg = kp[tbl].reshape(B, max_blocks * bs, *kp.shape[2:]).astype(q.dtype)
-        vg = vp[tbl].reshape(B, max_blocks * bs, *vp.shape[2:]).astype(q.dtype)
-        kpos = jnp.arange(max_blocks * bs)
+        kg = kp[tbl].reshape(B, a_blocks * bs, *kp.shape[2:]).astype(q.dtype)
+        vg = vp[tbl].reshape(B, a_blocks * bs, *vp.shape[2:]).astype(q.dtype)
+        kpos = jnp.arange(a_blocks * bs)
         mask = (kpos[None, :] < lengths[:, None])[:, None, None, None, :]
         out = _softmax_attend(q, kg, vg, mask, scale, decode=True, scores_dtype=sdt)
     o = adapted_matmul(out.reshape(B, 1, H * dh), p["wo"], (adp or {}).get("wo"))

@@ -153,8 +153,8 @@ class Model:
         per-lane cache (see ``repro.models.lane_state``)."""
         return tfm_lib.decode_state_lane_axes(self.cfg, paged=paged)
 
-    def paged_prefill_view(self, cache, write_ids):
-        return tfm_lib.paged_prefill_view(self.cfg, cache, write_ids)
+    def paged_prefill_view(self, cache, write_ids, read_ids=None):
+        return tfm_lib.paged_prefill_view(self.cfg, cache, write_ids, read_ids)
 
     def commit_paged_prefill(self, cache, filled, lane, table_row, length):
         return tfm_lib.commit_paged_prefill(
@@ -162,17 +162,17 @@ class Model:
         )
 
     def prefill(self, params, cache, tokens=None, embeds=None, image_embeds=None,
-                seg_ids=None, length=None):
+                seg_ids=None, length=None, start=None):
         return tfm_lib.decoder_prefill(
             params, self.cfg, cache, tokens=tokens, embeds=embeds,
-            image_embeds=image_embeds, seg_ids=seg_ids, length=length,
+            image_embeds=image_embeds, seg_ids=seg_ids, length=length, start=start,
         )
 
     def decode_step(self, params, cache, token=None, embeds=None, image_embeds=None,
-                    seg_ids=None):
+                    seg_ids=None, attend_blocks=None):
         return tfm_lib.decoder_decode(
             params, self.cfg, cache, token=token, embeds=embeds,
-            image_embeds=image_embeds, seg_ids=seg_ids,
+            image_embeds=image_embeds, seg_ids=seg_ids, attend_blocks=attend_blocks,
         )
 
     # ---- PEFT helpers ------------------------------------------------------

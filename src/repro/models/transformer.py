@@ -173,7 +173,7 @@ def _ckpt(fn, train: bool):
 
 def _group_body(
     cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False, seg_ids=None,
-    length=None,
+    length=None, attend_blocks=None,
 ):
     fam = cfg.family
     adapters = p.get("adapters")
@@ -186,6 +186,7 @@ def _group_body(
             p["attn"], h, cfg, positions=positions,
             adp=_adp_for(adapters, "attn", seg_ids),
             cache=cache_sl.get("attn") if cache_sl else None,
+            attend_blocks=attend_blocks,
         )
         if nc is not None:
             new_cache["attn"] = nc
@@ -209,6 +210,7 @@ def _group_body(
                         p["attn"], h, cfg, positions=positions,
                         adp=_adp_for(adapters, "attn", seg_ids),
                         cache=cache_sl.get("attn") if cache_sl else None,
+                        attend_blocks=attend_blocks,
                     ),
                     train,
                 )(h)
@@ -333,7 +335,7 @@ def _embed_input(params, cfg, tokens, embeds):
 
 def _run_groups(
     params, cfg: ModelConfig, x, positions, cache, img, decode, train, seg_ids=None,
-    length=None,
+    length=None, attend_blocks=None,
 ):
     groups = params["groups"]
 
@@ -342,7 +344,7 @@ def _run_groups(
         p, cache_sl = xs
         x, new_c, a = _group_body(
             cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat,
-            seg_ids=seg_ids, length=length,
+            seg_ids=seg_ids, length=length, attend_blocks=attend_blocks,
         )
         return (x, aux + a), new_c
 
@@ -513,31 +515,42 @@ def decode_state_lane_axes(cfg: ModelConfig, paged: bool = False) -> Dict[str, P
     return {"pos": 0, "layers": layers}
 
 
-def paged_prefill_view(cfg: ModelConfig, cache, write_ids):
+def paged_prefill_view(cfg: ModelConfig, cache, write_ids, read_ids=None):
     """1-lane paged-cache view for block-aligned admission prefill.
 
     Aliases the full engine cache's pools; the single block-table row is
-    ``write_ids`` (ceil(bucket/block_size),) — this prompt's *write targets*
+    ``write_ids`` (ceil(bucket/block_size),) — this pass's *write targets*
     per block, with trash block 0 standing in for already-resident shared
     prefix blocks and bucket padding.  Recurrent layers (hybrid's Mamba)
     get a fresh 1-lane state — prefill materializes the prompt's recurrent
     state into it.  ``decoder_prefill`` on this view scatters the prompt's
     K/V straight into the pool (attention.py's ``_paged_prefill``);
-    ``commit_paged_prefill`` folds the result back."""
+    ``commit_paged_prefill`` folds the result back.
+
+    ``read_ids`` (ceil(bucket/block_size),) switches the view to chunked
+    prefill: attention gathers its keys back out of the pool through this
+    row — the request's own blocks plus any adopted prefix-cache blocks —
+    so a chunk sees every earlier chunk's K/V (including blocks whose K/V
+    was never recomputed this prefill) under the absolute causal mask."""
     a = cache["layers"]["attn"]
     G = a["idx"].shape[0]
     nb = write_ids.shape[0]
+    attn = {
+        "k": a["k"],
+        "v": a["v"],
+        "block_tbl": jnp.broadcast_to(
+            write_ids.astype(jnp.int32)[None, None, :], (G, 1, nb)
+        ),
+        "idx": jnp.zeros((G, 1), jnp.int32),
+    }
+    if read_ids is not None:
+        attn["read_tbl"] = jnp.broadcast_to(
+            read_ids.astype(jnp.int32)[None, None, :], (G, 1, read_ids.shape[0])
+        )
     return {
         "pos": jnp.zeros((1,), jnp.int32),
         "layers": {
-            "attn": {
-                "k": a["k"],
-                "v": a["v"],
-                "block_tbl": jnp.broadcast_to(
-                    write_ids.astype(jnp.int32)[None, None, :], (G, 1, nb)
-                ),
-                "idx": jnp.zeros((G, 1), jnp.int32),
-            },
+            "attn": attn,
             **_recurrent_layer_states(cfg, 1, a["k"].dtype),
         },
     }
@@ -576,7 +589,7 @@ def commit_paged_prefill(cfg: ModelConfig, cache, filled, lane, table_row, lengt
 
 def decoder_prefill(
     params, cfg: ModelConfig, cache, tokens=None, embeds=None, image_embeds=None,
-    seg_ids=None, length=None,
+    seg_ids=None, length=None, start=None,
 ):
     """Fill the cache with a prompt; returns (last-position logits, cache).
 
@@ -587,10 +600,19 @@ def decoder_prefill(
     position/offsets are set to ``length``, so the padded tail is dead
     weight that decode overwrites and masks.  Causality keeps the valid
     prefix's K/V independent of the padding.
+
+    ``start`` (traced int32 scalar) marks ``tokens`` as one chunk of a
+    chunked paged prefill beginning at that absolute position: rope and the
+    causal mask run at ``start + arange(S)``, and the logits row is
+    ``length - 1 - start`` (meaningful only on the final chunk — earlier
+    chunks return clamped garbage the engine ignores).  The cache must be a
+    ``paged_prefill_view`` carrying a ``read_tbl``.
     """
     x = _embed_input(params, cfg, tokens, embeds)
     S = x.shape[1]
     positions = jnp.arange(S)
+    if start is not None:
+        positions = positions + jnp.asarray(start, jnp.int32)
     img = None
     if cfg.family == "vlm":
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
@@ -604,7 +626,10 @@ def decoder_prefill(
         new_pos = jnp.full_like(cache["pos"], S)
     else:
         length = jnp.asarray(length, jnp.int32)
-        x_last = jnp.take_along_axis(x, (length - 1)[:, None, None], axis=1)
+        row = length - 1
+        if start is not None:
+            row = jnp.clip(row - start, 0, S - 1)
+        x_last = jnp.take_along_axis(x, row[:, None, None], axis=1)
         new_pos = jnp.broadcast_to(length, cache["pos"].shape)
         if "attn" in new_layers:
             att = dict(new_layers["attn"])
@@ -619,9 +644,12 @@ def decoder_prefill(
 
 def decoder_decode(
     params, cfg: ModelConfig, cache, token=None, embeds=None, image_embeds=None,
-    seg_ids=None,
+    seg_ids=None, attend_blocks=None,
 ):
-    """One decode step. token (B,1) int32 (or embeds (B,1,d))."""
+    """One decode step. token (B,1) int32 (or embeds (B,1,d)).
+
+    ``attend_blocks`` (static) bounds the paged attend to the first
+    that-many block-table columns — see ``attention.attention``."""
     x = _embed_input(params, cfg, token, embeds)
     pos = cache["pos"]
     positions = pos[None] if pos.ndim == 0 else pos[:, None]
@@ -630,7 +658,7 @@ def decoder_decode(
         img = (image_embeds.astype(x.dtype) @ params["img_proj"]).astype(x.dtype)
     x, _, new_layers = _run_groups(
         params, cfg, x, positions, cache["layers"], img, decode=True, train=False,
-        seg_ids=seg_ids,
+        seg_ids=seg_ids, attend_blocks=attend_blocks,
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(

@@ -15,6 +15,10 @@ engine event              recorded as
                           the engine dedupes), queue-track instant marker
 ``on_admit``              ``serve_queue_wait_ms``; closes the queue span
 ``on_prefill``            ``serve_prefill_ms``; a lane-track prefill span
+                          (chunked prefills observe admission → final-chunk
+                          commit, spanning the interleaved decode steps)
+``on_prefill_chunk``      ``serve_prefill_chunk_ms``; a lane-track span per
+                          chunk of a chunked prefill
 ``on_token``              ``serve_ttft_ms`` (first delivered token) /
                           ``serve_tbt_ms`` (later ones), ``serve_tokens_total``
 ``on_decode_lane``        a thin per-token decode span on the lane track
@@ -23,7 +27,8 @@ engine event              recorded as
 ``on_retire``             ``serve_e2e_ms``, ``serve_retired_total``, closes the
                           request span
 ``phase``                 ``serve_step_phase_ms{phase}`` — where ``step()``
-                          spends host time (admit/grow/dispatch/sync/emit)
+                          spends host time (admit/prefill_chunk/grow/
+                          dispatch/sync/emit)
 ========================  ====================================================
 
 All times come from one ``perf_counter`` epoch shared with the tracer, so
@@ -62,6 +67,9 @@ class Telemetry:
             "serve_queue_wait_ms", "enqueue → lane admission (ms)")
         self.prefill_ms = m.histogram(
             "serve_prefill_ms", "admission prefill wall time (ms)")
+        self.prefill_chunk_ms = m.histogram(
+            "serve_prefill_chunk_ms",
+            "wall time of one chunk of a chunked prefill (ms)")
         self.step_phase = m.histogram(
             "serve_step_phase_ms",
             "host time per engine step() phase (ms)", labels=("phase",),
@@ -140,6 +148,20 @@ class Telemetry:
                 "prefill", PID_ENGINE, req.lane, t0, t1 - t0,
                 args={"uid": req.uid, "tenant": req.tenant,
                       "prompt_tokens": int(req.prompt.size)})
+
+    def on_prefill_chunk(self, req, t0: float, t1: float, start: int,
+                         tokens: int) -> None:
+        """One chunk of a chunked prefill (absolute prompt position
+        ``start``, ``tokens`` positions processed)."""
+        if not self.enabled:
+            return
+        req.trace.mark("prefill_chunk", t1, {"start": int(start)})
+        self.prefill_chunk_ms.observe((t1 - t0) * 1e3)
+        if self.tracer:
+            self.tracer.complete(
+                "prefill_chunk", PID_ENGINE, req.lane, t0, t1 - t0,
+                args={"uid": req.uid, "tenant": req.tenant,
+                      "start": int(start), "tokens": int(tokens)})
 
     def on_token(self, req) -> None:
         """One *delivered* token (the engine calls this inside its

@@ -36,11 +36,16 @@ Slot 0 holds λ ≡ 0: the base model is just another tenant in the batch.
 Pieces
 ======
 
+* :mod:`repro.serving.config`    — :class:`EngineConfig`: the validated,
+  typed engine configuration (layout selection, paging, prefix sharing,
+  chunked prefill, λ-store tiers) with ``serving()`` / ``oracle_dense()``
+  presets.  Construct engines as
+  ``MultiTenantEngine(cfg, EngineConfig.serving(), params=p)``.
 * :mod:`repro.serving.lam_store` — hierarchical λ-store: load / pin /
   hot-swap per-tenant λ into packed device tables (one donated slot write
   per mutation), LRU eviction with a host cold tier (spill → promote), a
-  slot-0 base tenant, and optional mesh sharding of the slot axis
-  (``repro.serving.registry`` re-exports the old ``AdapterRegistry`` name).
+  slot-0 base tenant, and optional mesh sharding of the slot axis.
+  (:class:`LamStore`; ``AdapterRegistry`` survives as a deprecated alias.)
 * :mod:`repro.serving.scheduler` — continuous batching: FIFO request queue
   over fixed decode lanes, prefill/decode interleaving, per-lane slot ids.
 * :mod:`repro.serving.paging`    — ref-counted block allocator + prefix
@@ -58,7 +63,13 @@ Pieces
 Drivers: ``launch/serve_multi.py`` (mixed-tenant batch with per-tenant
 verification against merged weights), ``benchmarks/serve_multitenant.py``
 (decode throughput vs tenant count).
+
+This package is the one import site for the serving API — everything below
+re-exports here (``from repro.serving import MultiTenantEngine,
+EngineConfig, LamStore``); the old ``repro.serving.registry`` shim module
+is gone.
 """
+from repro.serving.config import EngineConfig
 from repro.serving.engine import (
     MultiTenantEngine,
     TokenEvent,
@@ -81,6 +92,7 @@ __all__ = [
     "AdapterRegistry",
     "BASE_TENANT",
     "COLD_SLOT",
+    "EngineConfig",
     "LamStore",
     "BlockAllocator",
     "ContinuousBatchScheduler",

@@ -65,13 +65,30 @@ lane that has decoded N tokens while others queue is snapshot-preempted
 back of the queue and later *restored* instead of re-prefilled, so long
 generations round-robin with waiting requests at zero recompute.
 
-The engine is greedy-decode and host-driven: ``step()`` = admit + grow +
-one decode step; ``run()`` loops until queue and lanes drain, ``stream()``
-yields per-token :class:`TokenEvent`\\ s as they decode.
+``prefill_chunk=N`` (chunked prefill, paged layouts) keeps admission off
+the decode critical path: a long prompt is split into N-token chunks
+processed one (budgeted) chunk per engine step, interleaved with resident
+lanes' decode.  Each chunk scatters its K/V into the lane's pool blocks and
+attends back *through the pool* (``read_tbl``) under the absolute causal
+mask, so the result is bit-identical to the monolithic prefill; prefix-
+cache-hit blocks are skipped entirely (their K/V is already resident —
+today that saves the FLOPs, not just the memory).  The lane stays dark —
+table row trash, offsets zero — until the final chunk commits, so
+interleaved decode steps never observe a half-filled prompt.
+
+Engine construction takes an :class:`~repro.serving.config.EngineConfig`
+(``MultiTenantEngine(cfg, EngineConfig.serving(), params=p)``); the
+pre-config keyword surface (``paged=``, ``share_prefix=``, …) still works
+through a once-warning deprecation shim.
+
+The engine is greedy-decode and host-driven: ``step()`` = admit + prefill
+chunks + grow + one decode step; ``run()`` loops until queue and lanes
+drain, ``stream()`` yields per-token :class:`TokenEvent`\\ s as they decode.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from contextlib import nullcontext
 from typing import Any, Dict, Iterator, List, Optional
 
@@ -85,8 +102,8 @@ from repro.core import adapter_api
 from repro.models import build_model
 from repro.obs import Telemetry
 from repro.models.lane_state import extract_lane, restore_lane
-from repro.models.transformer import PAGED_FAMILIES
-from repro.serving.lam_store import AdapterRegistry, extract_lambda
+from repro.serving.config import EngineConfig
+from repro.serving.lam_store import LamStore, extract_lambda
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 from repro.sharding.rules import axis_rules
@@ -94,6 +111,33 @@ from repro.sharding.rules import axis_rules
 Pytree = Any
 
 _MIN_PREFILL_BUCKET = 8
+
+#: Families whose prompt forward pass is position-local outside attention
+#: (token-table embedding, no recurrent mixer), so prefill can run in
+#: block-aligned chunks that attend back through the pool.  Hybrid's Mamba
+#: scan carries state across the whole prompt — it prefills monolithically.
+_CHUNKABLE_FAMILIES = ("dense", "audio", "moe")
+
+# -- deprecation shim --------------------------------------------------------
+# Every repro.serving DeprecationWarning message carries this prefix so the
+# pytest filter in pyproject.toml can promote exactly the repo's own
+# deprecations to errors (shim tests opt back out by the same prefix).
+_DEPRECATION = "repro.serving deprecation: "
+_warned: set = set()
+
+
+def _warn_once(topic: str, msg: str) -> None:
+    """One DeprecationWarning per process per topic, so a sweep over a
+    legacy call site warns once instead of once per construction."""
+    if topic in _warned:
+        return
+    _warned.add(topic)
+    warnings.warn(_DEPRECATION + msg, DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-process deprecation warnings (tests)."""
+    _warned.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,10 +152,13 @@ class TokenEvent:
     done: bool  # True on the request's final token (retirement)
 
 
-def _bucket_len(n: int, max_len: int) -> int:
-    """Smallest power-of-two ≥ n (floor _MIN_PREFILL_BUCKET), clamped to
-    max_len — the padded prompt length admission prefill compiles for."""
-    b = _MIN_PREFILL_BUCKET
+def _bucket_len(n: int, max_len: int, floor: int = _MIN_PREFILL_BUCKET) -> int:
+    """Smallest power-of-two ≥ n (floor ``floor``), clamped to max_len —
+    the padded prompt length admission prefill compiles for.  Paged engines
+    raise the floor to ``block_size``: every bucket is then block-aligned
+    (matching the write-id geometry chunked prefill needs) and the
+    sub-block buckets collapse into one compilation."""
+    b = floor
     while b < n:
         b *= 2
     return min(b, max_len)
@@ -121,47 +168,57 @@ class MultiTenantEngine:
     def __init__(
         self,
         cfg: ModelConfig,
+        config: Optional[EngineConfig] = None,
         *,
         params: Optional[Pytree] = None,
-        n_lanes: int = 4,
-        n_slots: int = 8,
-        max_len: int = 128,
-        collect_logits: bool = False,
-        seed: int = 0,
-        paged: bool = False,
-        block_size: int = 16,
-        n_blocks: Optional[int] = None,
-        share_prefix: bool = False,
-        watermark: int = 0,
-        quantum: Optional[int] = None,
-        cold_slots: int = 0,
-        shard_lam: bool = False,
-        telemetry: bool = True,
+        **legacy,
     ):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either an EngineConfig or legacy keywords, not both"
+                )
+            _warn_once(
+                "engine-kwargs",
+                "MultiTenantEngine(cfg, n_lanes=..., paged=..., ...) keyword "
+                "construction is deprecated; pass an EngineConfig "
+                "(repro.serving.config), e.g. "
+                "MultiTenantEngine(cfg, EngineConfig.serving(), params=p)",
+            )
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+        elif config is None:
+            config = EngineConfig()
         if cfg.is_encoder or cfg.family == "vlm":
             raise NotImplementedError(
                 f"continuous batching needs a token decode path (family "
                 f"{cfg.family!r}: vlm lanes would need per-lane image "
                 "embeds, encoders don't decode)"
             )
-        if paged and cfg.family not in PAGED_FAMILIES:
-            raise ValueError(
-                f"paged=True needs attention layers to page; family "
-                f"{cfg.family!r} has none — its per-lane state is already "
-                "O(1), run the dense per-lane layout"
-            )
-        if quantum is not None:
-            if paged:
-                raise ValueError(
-                    "quantum time-slicing snapshots lane state, which a "
-                    "paged lane spreads over pool blocks — use the dense "
-                    "layout (paged=False) for time-sliced serving"
-                )
-            if quantum < 1:
-                raise ValueError(f"quantum={quantum} must be >= 1 decode step")
         if cfg.adapter.mode != "qr_lora":
             raise ValueError("multi-λ serving is defined for qr_lora adapters")
+        layout = config.resolved_layout(cfg.family)  # raises: paged + no attn
+        paged = layout == "paged"
+        if not paged:
+            # explicit oracle_dense conflicts fail in EngineConfig itself;
+            # these catch layout="auto" resolving dense for a family whose
+            # config asked for paged-only machinery
+            if config.share_prefix:
+                raise ValueError(
+                    "share_prefix requires a paged layout (blocks to share)"
+                )
+            if config.watermark:
+                raise ValueError(
+                    "watermark requires a paged layout (blocks to reserve)"
+                )
+        n_lanes, n_slots = config.n_lanes, config.n_slots
+        max_len, block_size = config.max_len, config.block_size
+        n_blocks, share_prefix = config.n_blocks, config.share_prefix
+        watermark, quantum = config.watermark, config.quantum
+        cold_slots, shard_lam = config.cold_slots, config.shard_lam
+        telemetry, seed = config.telemetry, config.seed
         self.cfg = cfg
+        self.config = config
+        self.layout = layout
         self.model = build_model(cfg)
         self.params = (
             params if params is not None else self.model.init(jax.random.PRNGKey(seed))
@@ -188,24 +245,33 @@ class MultiTenantEngine:
             self._mesh = make_mesh((len(jax.devices()),), ("model",))
             self._mesh_rules = {"lam_slots": "model"}
         with self._rules_ctx():
-            self.registry = AdapterRegistry.from_params(
+            self.lam_store = LamStore.from_params(
                 self.params, n_slots=n_slots, cold_slots=cold_slots,
                 mesh=self._mesh,
             )
         # tier pressure can drop a tenant without an explicit evict — its
         # prefix-cache family must be reclaimed just as eagerly
-        self.registry.on_drop = lambda tenant, dg: self._drop_stale_family(dg)
-        self.registry.attach_metrics(tel.registry)
+        self.lam_store.on_drop = lambda tenant, dg: self._drop_stale_family(dg)
+        self.lam_store.attach_metrics(tel.registry)
         self.scheduler = ContinuousBatchScheduler(n_lanes)
         self.n_lanes, self.max_len = n_lanes, max_len
-        self.collect_logits = collect_logits
+        self.collect_logits = config.collect_logits
         self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.paged = paged
         self.quantum = quantum
         self.slice_preemptions = 0  # quantum snapshot-preemptions
         self.events: List[TokenEvent] = []  # tokens decoded by the last step()
-        if share_prefix and not paged:
-            raise ValueError("share_prefix requires paged=True (blocks to share)")
+        # chunked prefill: paged layouts of chunk-safe families only; hybrid
+        # (Mamba scan spans the prompt) silently prefills monolithically
+        self.prefill_chunk = config.prefill_chunk if paged else None
+        self._chunkable = cfg.family in _CHUNKABLE_FAMILIES
+        # uid → in-flight chunked-prefill progress (_begin_chunked_prefill)
+        self._prefilling: Dict[int, Dict[str, Any]] = {}
+        # paged buckets are floored at block_size: block-aligned shapes, one
+        # compilation for every sub-block prompt (see _bucket_len)
+        self._prefill_floor = (
+            max(_MIN_PREFILL_BUCKET, block_size) if paged else _MIN_PREFILL_BUCKET
+        )
         if paged:
             if max_len % block_size:
                 raise ValueError(
@@ -266,8 +332,13 @@ class MultiTenantEngine:
         def _prefill(view, cache, tokens, seg, length):
             return model.prefill(view, cache, tokens=tokens, seg_ids=seg, length=length)
 
-        def _decode(view, cache, tok, seg):
-            return model.decode_step(view, cache, token=tok, seg_ids=seg)
+        def _decode(view, cache, tok, seg, attend_blocks):
+            """One decode step.  ``attend_blocks`` (static, paged layouts)
+            bounds the fused attend to the active lanes' block high-water
+            mark — HBM traffic tracks the longest live lane, not max_len."""
+            return model.decode_step(
+                view, cache, token=tok, seg_ids=seg, attend_blocks=attend_blocks
+            )
 
         def _restore(big, small, lane):
             """Splice a 1-lane tree (admission prefill or preemption
@@ -292,6 +363,38 @@ class MultiTenantEngine:
             pview = model.paged_prefill_view(cache, write_ids)
             logits, filled = model.prefill(
                 view, pview, tokens=tokens, seg_ids=seg, length=length
+            )
+            return logits, model.commit_paged_prefill(
+                cache, filled, lane, table_row, length
+            )
+
+        def _prefill_chunk(view, cache, tokens, seg, length, start, write_ids,
+                           read_ids):
+            """One non-final chunk of a chunked admission prefill: scatter
+            this chunk's K/V into its pool blocks (cached prefix blocks and
+            bucket overhang → trash) while attending back through
+            ``read_ids``, so the chunk sees every earlier chunk's K/V under
+            the absolute causal mask at ``start``.  Only the pools change —
+            the lane's table row, offsets and position stay dark until the
+            final chunk commits."""
+            pview = model.paged_prefill_view(cache, write_ids, read_ids)
+            _, filled = model.prefill(
+                view, pview, tokens=tokens, seg_ids=seg, length=length,
+                start=start,
+            )
+            a, f = cache["layers"]["attn"], filled["layers"]["attn"]
+            attn = {**a, "k": f["k"], "v": f["v"]}
+            return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
+
+        def _prefill_chunk_final(view, cache, tokens, seg, length, start,
+                                 write_ids, read_ids, lane, table_row):
+            """Final chunk: same pass, then commit the lane (table row in,
+            offsets ← true length) and surface the prompt's next-token
+            logits (row ``length-1-start`` lands inside this chunk)."""
+            pview = model.paged_prefill_view(cache, write_ids, read_ids)
+            logits, filled = model.prefill(
+                view, pview, tokens=tokens, seg_ids=seg, length=length,
+                start=start,
             )
             return logits, model.commit_paged_prefill(
                 cache, filled, lane, table_row, length
@@ -329,11 +432,13 @@ class MultiTenantEngine:
         # logical-axis rules for the λ-table sharding — keep the rule
         # context active around every call (the tracing one included)
         self._prefill = self._with_rules(jax.jit(_prefill))
-        self._decode = self._with_rules(jax.jit(_decode))
+        self._decode = self._with_rules(jax.jit(_decode, static_argnums=(4,)))
         self._restore = jax.jit(_restore)
         self._extract = jax.jit(_extract)
         self._reset = jax.jit(_reset)
         self._prefill_paged = self._with_rules(jax.jit(_prefill_paged))
+        self._prefill_chunk = self._with_rules(jax.jit(_prefill_chunk))
+        self._prefill_chunk_final = self._with_rules(jax.jit(_prefill_chunk_final))
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
 
@@ -359,7 +464,8 @@ class MultiTenantEngine:
                      help="distinct padded prompt lengths prefilled "
                           "(= prefill compilations under bucketing)")
         for _n, _f in (("prefill", self._prefill), ("decode", self._decode),
-                       ("prefill_paged", self._prefill_paged)):
+                       ("prefill_paged", self._prefill_paged),
+                       ("prefill_chunk", self._prefill_chunk)):
             _cs = getattr(_f, "_cache_size", None)
             if callable(_cs):
                 reg.callback(f"serve_jit_compiles_{_n}", _cs, kind="counter",
@@ -381,6 +487,15 @@ class MultiTenantEngine:
         wrapped._cache_size = getattr(jf, "_cache_size", None)
         return wrapped
 
+    @property
+    def registry(self) -> LamStore:
+        """Deprecated alias of :attr:`lam_store` (the PR-1 name)."""
+        _warn_once(
+            "engine-registry",
+            "MultiTenantEngine.registry is deprecated; use .lam_store",
+        )
+        return self.lam_store
+
     # -- tenants ------------------------------------------------------------
 
     def add_tenant(self, tenant: str, lam_tree) -> int:
@@ -388,16 +503,16 @@ class MultiTenantEngine:
         (or ``COLD_SLOT`` when it landed in the host cold tier).  A
         hot-swap that retires the tenant's old λ digest eagerly drops that
         family's prefix-cache entries."""
-        old = self.registry.digest(tenant) if tenant in self.registry else None
-        slot = self.registry.register(tenant, lam_tree)
+        old = self.lam_store.digest(tenant) if tenant in self.lam_store else None
+        slot = self.lam_store.register(tenant, lam_tree)
         self._drop_stale_family(old)
         return slot
 
     def remove_tenant(self, tenant: str) -> None:
         """Drop a tenant from both λ-store tiers (no queued/active work may
         reference it) and reclaim its prefix-cache family eagerly."""
-        old = self.registry.digest(tenant)
-        self.registry.evict(tenant)
+        old = self.lam_store.digest(tenant)
+        self.lam_store.evict(tenant)
         self._drop_stale_family(old)
 
     def _drop_stale_family(self, old_digest: Optional[bytes]) -> None:
@@ -406,17 +521,17 @@ class MultiTenantEngine:
         blocks ref'd until cache LRU finally cycles them out."""
         if old_digest is None or self.prefix_cache is None:
             return
-        if self.registry.digest_refcount(old_digest) == 0:
+        if self.lam_store.digest_refcount(old_digest) == 0:
             self.prefix_cache.drop_family(old_digest)
 
     def _params_view(self) -> Pytree:
         # LamStore.install() memoizes on (params identity, version) itself
-        return self.registry.install(self.params)
+        return self.lam_store.install(self.params)
 
     # -- requests -----------------------------------------------------------
 
     def submit(self, tenant: str, prompt, max_new_tokens: int) -> Request:
-        if tenant not in self.registry:
+        if tenant not in self.lam_store:
             raise KeyError(f"unknown tenant {tenant!r} — add_tenant() first")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new_tokens > self.max_len:
@@ -442,11 +557,11 @@ class MultiTenantEngine:
             # stay in the store but may spill to the cold tier while
             # queued); the hot-slot pin is taken at admission, when the
             # request actually occupies a lane.
-            self.registry.protect(tenant)
+            self.lam_store.protect(tenant)
         else:
             # pin from submission (not admission): a queued request must keep
             # its tenant's slot resident until it finishes
-            self.registry.pin(tenant)
+            self.lam_store.pin(tenant)
         req = self.scheduler.submit(tenant, prompt, max_new_tokens)
         self.telemetry.on_submit(req)
         return req
@@ -458,8 +573,8 @@ class MultiTenantEngine:
         prefills may only share K/V blocks when they ran the same adapter
         *and* the same compiled prefill program (same bucket) — that keeps
         shared-prefix output bit-identical to the unshared engine."""
-        Pb = _bucket_len(req.prompt.size, self.max_len)
-        return self.registry.digest(req.tenant) + Pb.to_bytes(4, "little")
+        Pb = _bucket_len(req.prompt.size, self.max_len, self._prefill_floor)
+        return self.lam_store.digest(req.tenant) + Pb.to_bytes(4, "little")
 
     def _admission_gate(self):
         """Pool gate for ``scheduler.admit``: approving a request *reserves*
@@ -510,7 +625,7 @@ class MultiTenantEngine:
         paged_gate = self._admission_gate() if self.paged else None
         if not self._cold_tier:
             return paged_gate
-        reg = self.registry
+        reg = self.lam_store
 
         def gate(req: Request) -> bool:
             if not reg.is_hot(req.tenant) and reg.promote(req.tenant) is None:
@@ -551,11 +666,15 @@ class MultiTenantEngine:
         the lost tokens on re-admission."""
         lane = victim.lane
         self.telemetry.on_preempt(victim, "block_pressure")
+        # a mid-chunked-prefill victim just abandons its progress: its lane
+        # was never committed (table row still trash), its blocks free like
+        # any lane's, and re-admission restarts the chunked prefill
+        self._prefilling.pop(victim.uid, None)
         for b in self._lane_blocks.pop(lane):
             self.allocator.decref(b)
         self.cache = self._reset(self.cache, lane)
         if self._cold_tier:
-            self.registry.unpin(victim.tenant)  # re-pinned at re-admission
+            self.lam_store.unpin(victim.tenant)  # re-pinned at re-admission
         self.scheduler.preempt(victim)
         self.preemptions += 1
 
@@ -570,7 +689,7 @@ class MultiTenantEngine:
         self.telemetry.on_preempt(req, "quantum")
         req.snapshot = jax.device_get(self._extract(self.cache, req.lane))
         if self._cold_tier:
-            self.registry.unpin(req.tenant)  # re-pinned at re-admission
+            self.lam_store.unpin(req.tenant)  # re-pinned at re-admission
         self.scheduler.preempt(req, to_back=True, keep_progress=True)
         self.slice_preemptions += 1
 
@@ -581,6 +700,8 @@ class MultiTenantEngine:
         bs = self.block_size
         for req in sorted(self.scheduler.active(), key=lambda r: r.admit_seq):
             if req.lane < 0:  # preempted by an older lane's growth this pass
+                continue
+            if req.uid in self._prefilling:  # not decoding yet — no growth
                 continue
             write_pos = req.prompt.size + len(req.tokens) - 1
             blk_idx = write_pos // bs
@@ -614,7 +735,7 @@ class MultiTenantEngine:
         for req in self.scheduler.admit(gate):
             tel.on_admit(req, restored=req.snapshot is not None)
             view = self._params_view()  # after gate: promotion bumps version
-            req.slot = self.registry.lookup(req.tenant)  # pinned since submit
+            req.slot = self.lam_store.lookup(req.tenant)  # pinned since submit
             req.slice_steps = 0
             if req.snapshot is not None:
                 # time-sliced re-admission: restore the preemption snapshot
@@ -628,13 +749,22 @@ class MultiTenantEngine:
             # prompt lengths share prefill compilations; true length masks
             # (incl. the recurrent states: padded scan steps are identities)
             P = req.prompt.size
-            Pb = _bucket_len(P, self.max_len)
+            Pb = _bucket_len(P, self.max_len, self._prefill_floor)
             padded = np.zeros((Pb,), np.int32)
             padded[:P] = req.prompt
             self.prefill_buckets.add(Pb)
             length = jnp.full((1,), P, jnp.int32)
             t0 = tel.now() if tel.enabled else 0.0
             if self.paged:
+                if (
+                    self.prefill_chunk is not None
+                    and self._chunkable
+                    and Pb > self.prefill_chunk
+                ):
+                    # long prompt: allocate its blocks now, stream its
+                    # chunks through the following steps' prefill budget
+                    self._begin_chunked_prefill(req, padded, seg, length, t0)
+                    continue
                 logits = self._admit_paged(req, view, padded, seg, length)
             else:
                 lane_cache = self.model.init_decode_state(
@@ -696,6 +826,124 @@ class MultiTenantEngine:
             self.telemetry.prefix_misses.inc(P // bs - len(cached))
         return logits
 
+    # -- chunked prefill ----------------------------------------------------
+
+    def _begin_chunked_prefill(self, req: Request, padded, seg, length, t0):
+        """Paged admission, chunked: adopt/allocate the prompt's blocks
+        exactly like :meth:`_admit_paged`, but run no prefill yet — queue
+        the prompt for chunk-at-a-time processing interleaved with decode
+        steps (:meth:`_run_prefill_chunks`).  The lane stays dark (table row
+        trash, offsets zero) until the final chunk commits, so decode steps
+        running between chunks neither read nor clobber the half-filled
+        prompt; the lane's own interim decode writes land in the trash
+        block and its outputs are discarded."""
+        P, bs, C = req.prompt.size, self.block_size, self.prefill_chunk
+        cached = self._gate_matches.pop(req.uid, [])
+        if self.prefix_cache is not None:
+            # same-round re-match as _admit_paged (extend-only, see there)
+            fresh = self.prefix_cache.match(self._family(req), req.prompt)
+            if len(fresh) > len(cached) and fresh[: len(cached)] == cached:
+                for b in fresh[len(cached):]:
+                    self.allocator.incref(b)
+                self.prefix_cache.hits += len(fresh) - len(cached)
+                self.prefix_cache.misses -= len(fresh) - len(cached)
+                cached = fresh
+        new_ids = self.allocator.alloc(self.allocator.blocks_for(P) - len(cached))
+        blocks = cached + new_ids
+        self._lane_blocks[req.lane] = blocks
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+
+        Pb = len(padded)
+        # chunk starts may overhang the bucket (the cache-hit skip is block-
+        # aligned, not chunk-aligned); pad the token buffer and write table
+        # by one chunk so overhang positions write trash like any padding
+        tokens = np.zeros((Pb + C,), np.int32)
+        tokens[:P] = req.prompt
+        write_ids = np.zeros((-(-(Pb + C) // bs),), np.int32)
+        write_ids[len(cached): len(blocks)] = new_ids
+        # chunks attend through the lane's own blocks at the monolithic
+        # bucket width — cached blocks included, which is what lets prefill
+        # skip recomputing their K/V entirely
+        read_ids = np.zeros((-(-Pb // bs),), np.int32)
+        read_ids[: len(blocks)] = blocks
+        table_row = np.zeros((self.max_blocks,), np.int32)
+        table_row[: len(blocks)] = blocks
+        skip = len(cached) * bs
+        if skip >= P:
+            # fully cached prompt: every K/V block is resident; one pass
+            # over the last C positions just to surface the logits row
+            starts = [max(P - C, 0)]
+        else:
+            starts = list(range(skip, P, C))
+        req.prefill_pos = starts[0]
+        self._prefilling[req.uid] = {
+            "req": req, "seg": seg, "length": length, "t0": t0,
+            "tokens": tokens,
+            "write_ids": jnp.asarray(write_ids),
+            "read_ids": jnp.asarray(read_ids),
+            "table_row": jnp.asarray(table_row),
+            "starts": starts, "next": 0, "cached": len(cached),
+        }
+
+    def _run_prefill_chunks(self, finished: List[Request]) -> None:
+        """Advance in-flight chunked prefills, FIFO by admission order,
+        spending at most ``prefill_chunk`` prompt tokens per engine step
+        (and always at least one chunk, so prefill cannot starve) — the
+        budget is what keeps resident lanes' time-between-tokens bounded
+        while long prompts stream in."""
+        tel = self.telemetry
+        C = self.prefill_chunk
+        budget = C
+        for st in sorted(self._prefilling.values(),
+                         key=lambda s: s["req"].admit_seq):
+            while budget > 0 and st["next"] < len(st["starts"]):
+                budget -= C
+                req = st["req"]
+                start = st["starts"][st["next"]]
+                last = st["next"] + 1 == len(st["starts"])
+                view = self._params_view()
+                toks = jnp.asarray(st["tokens"][start: start + C])[None, :]
+                t0 = tel.now() if tel.enabled else 0.0
+                if last:
+                    logits, self.cache = self._prefill_chunk_final(
+                        view, self.cache, toks, st["seg"], st["length"],
+                        np.int32(start), st["write_ids"], st["read_ids"],
+                        req.lane, st["table_row"],
+                    )
+                    row = np.asarray(logits[0])  # host sync: chunk really ran
+                else:
+                    self.cache = self._prefill_chunk(
+                        view, self.cache, toks, st["seg"], st["length"],
+                        np.int32(start), st["write_ids"], st["read_ids"],
+                    )
+                st["next"] += 1
+                req.prefill_pos = -1 if last else st["starts"][st["next"]]
+                if tel.enabled:
+                    if not last:
+                        # make the span honest: wait for the chunk's scatter
+                        jax.block_until_ready(self.cache["layers"]["attn"]["k"])
+                    tel.on_prefill_chunk(req, t0, tel.now(), start, C)
+                if last:
+                    self._finish_chunked(st, req, row, finished)
+
+    def _finish_chunked(self, st, req: Request, row, finished: List[Request]):
+        """Final chunk committed: file the prompt in the prefix cache (the
+        blocks only now hold its K/V — monolithic prefill inserts at
+        admission, chunked at completion) and emit the first token."""
+        del self._prefilling[req.uid]
+        tel = self.telemetry
+        if self.prefix_cache is not None:
+            P, bs = req.prompt.size, self.block_size
+            self.prefix_cache.insert(
+                self._family(req), req.prompt, self._lane_blocks[req.lane]
+            )
+            tel.prefix_hits.inc(st["cached"])
+            tel.prefix_misses.inc(P // bs - st["cached"])
+        if tel.enabled:
+            tel.on_prefill(req, st["t0"], tel.now())
+        self._emit(req, row, finished)
+
     def _emit(self, req: Request, logits_row: np.ndarray, finished: List[Request]):
         tok = int(logits_row.argmax())
         req.tokens.append(tok)
@@ -718,9 +966,9 @@ class MultiTenantEngine:
             self.telemetry.on_retire(req)
             lane = req.lane
             self.scheduler.finish(req)
-            self.registry.unpin(req.tenant)
+            self.lam_store.unpin(req.tenant)
             if self._cold_tier:
-                self.registry.unprotect(req.tenant)
+                self.lam_store.unprotect(req.tenant)
             if self.paged:
                 for b in self._lane_blocks.pop(lane):
                     self.allocator.decref(b)  # shared blocks survive in-cache
@@ -734,9 +982,10 @@ class MultiTenantEngine:
 
     def step(self) -> List[Request]:
         """Time-slice over-quantum lanes (when work queues), admit waiting
-        requests, grow/CoW-fork lanes crossing block boundaries, run one
-        shared decode step over all lanes; returns requests that finished
-        this step.  Per-token events land in ``self.events``."""
+        requests, advance chunked prefills under the token budget, grow/
+        CoW-fork lanes crossing block boundaries, run one shared decode step
+        over the committed lanes; returns requests that finished this step.
+        Per-token events land in ``self.events``."""
         finished: List[Request] = []
         self.events = []
         tel = self.telemetry
@@ -763,6 +1012,12 @@ class MultiTenantEngine:
             now = tel.now()
             tel.phase("admit", now - t)
             t = now
+        if self._prefilling:
+            self._run_prefill_chunks(finished)
+            if on:
+                now = tel.now()
+                tel.phase("prefill_chunk", now - t)
+                t = now
         if self.paged:
             self._grow_lanes()
             if on:
@@ -770,15 +1025,42 @@ class MultiTenantEngine:
                 tel.phase("grow", now - t)
                 t = now
         active = self.scheduler.active()
-        if not active:
+        # mid-chunked-prefill lanes occupy a lane but have no token to
+        # decode yet — they ride the shared step as masked rows (their
+        # writes hit the trash block, their logits are discarded)
+        decoding = (
+            [r for r in active if r.uid not in self._prefilling]
+            if self._prefilling
+            else active
+        )
+        if not decoding:
             return finished
         tok = np.zeros((self.n_lanes, 1), np.int32)
-        for req in active:
+        for req in decoding:
             tok[req.lane, 0] = req.tokens[-1]
+        ab = None
+        if self.paged:
+            # bound the fused attend to the decoding lanes' block high-water
+            # mark, bucketed to powers of two so distinct active lengths
+            # share decode compilations (≤ log2(max_blocks) variants).  The
+            # mark uses each lane's *planned* final length (prompt +
+            # generation budget, known at admission) rather than its current
+            # length: the bucket is then fixed for the request's lifetime,
+            # so lane growth never triggers a mid-request recompile — a few
+            # masked attend columns (bit-identical, see _paged_decode) buy
+            # a compile-free steady state.
+            hw = max(
+                -(-(r.prompt.size + r.max_new_tokens) // self.block_size)
+                for r in decoding
+            )
+            ab = 1
+            while ab < hw:
+                ab *= 2
+            ab = min(ab, self.max_blocks)
         seg = jnp.asarray(self.scheduler.batch_composition())
         view = self._params_view()
         t_disp = tel.now() if on else 0.0
-        logits, self.cache = self._decode(view, self.cache, jnp.asarray(tok), seg)
+        logits, self.cache = self._decode(view, self.cache, jnp.asarray(tok), seg, ab)
         if on:
             now = tel.now()
             tel.phase("dispatch", now - t_disp)
@@ -789,7 +1071,7 @@ class MultiTenantEngine:
             t_sync = tel.now()
             tel.phase("sync", t_sync - t)
         self.steps += 1
-        for req in active:
+        for req in decoding:
             req.slice_steps += 1
             self._emit(req, logits_np[req.lane], finished)
             if on:

@@ -31,6 +31,10 @@ class Request:
     admit_seq: int = -1  # admission ordinal (preemption picks the youngest)
     preemptions: int = 0
     slice_steps: int = 0  # decode steps since (re-)admission (time-slicing)
+    # chunked prefill (paged engines, prefill_chunk=N): absolute prompt
+    # position the next chunk starts at, -1 when not mid-prefill — the lane
+    # holds no decodable token while this is >= 0
+    prefill_pos: int = -1
     delivered: int = 0  # tokens already surfaced as stream events (monotonic:
     # survives the discard-preempt tokens.clear() so re-derived tokens are
     # not delivered twice)
@@ -129,6 +133,7 @@ class ContinuousBatchScheduler:
         req.admit_seq = -1
         req.preemptions += 1
         req.slice_steps = 0
+        req.prefill_pos = -1  # an interrupted chunked prefill restarts
         if not keep_progress:
             req.tokens.clear()
             req.logits.clear()

@@ -18,6 +18,7 @@ from repro.configs import get_reduced
 from repro.serving import (
     BASE_TENANT,
     COLD_SLOT,
+    EngineConfig,
     LamStore,
     MultiTenantEngine,
     random_lambda,
@@ -307,18 +308,21 @@ def test_engine_promotes_cold_tenant_on_admission():
     round-tripped λ is the λ that serves."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=1, n_slots=3, max_len=32, cold_slots=8, collect_logits=True
+        cfg,
+        EngineConfig(
+            n_lanes=1, n_slots=3, max_len=32, cold_slots=8, collect_logits=True
+        ),
     )
     lams = {}
     for i in range(1, 5):
         lams[f"t{i}"] = random_lambda(jax.random.PRNGKey(i), eng.params, 0.3)
         eng.add_tenant(f"t{i}", lams[f"t{i}"])
-    assert eng.registry.is_cold("t1"), "overflow did not spill to the cold tier"
+    assert eng.lam_store.is_cold("t1"), "overflow did not spill to the cold tier"
     rng = np.random.default_rng(0)
     prompt = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
     req = eng.submit("t1", prompt, 4)
     done = eng.run()
-    assert eng.registry.promotes >= 1
+    assert eng.lam_store.promotes >= 1
     ref_toks, ref_logits = reference_decode(cfg, eng.params, lams["t1"], prompt, 4, 32)
     assert done[req.uid].tokens == ref_toks
     np.testing.assert_allclose(
@@ -330,10 +334,12 @@ def test_engine_defers_admission_until_hot_slot_frees():
     """With every hot slot pinned by active lanes, a cold tenant's request
     defers (exactly like pool-full) and admits once a lane retires."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
-    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=32, cold_slots=4)
+    eng = MultiTenantEngine(
+        cfg, EngineConfig(n_lanes=2, n_slots=2, max_len=32, cold_slots=4)
+    )
     eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
     eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.2))
-    assert eng.registry.is_cold("t1")  # t2 took the single usable hot slot
+    assert eng.lam_store.is_cold("t1")  # t2 took the single usable hot slot
     rng = np.random.default_rng(0)
     r2 = eng.submit("t2", rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 8)
     r1 = eng.submit("t1", rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 4)
@@ -350,8 +356,11 @@ def test_hot_swap_and_removal_drop_stale_prefix_families():
     carries that digest (same-λ tenants share families)."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=4, max_len=32,
-        paged=True, block_size=8, share_prefix=True,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=4, max_len=32, block_size=8,
+            share_prefix=True,
+        ),
     )
     lam_a = random_lambda(jax.random.PRNGKey(1), eng.params, 0.2)
     lam_b = random_lambda(jax.random.PRNGKey(2), eng.params, 0.2)
@@ -377,8 +386,11 @@ def test_implicit_lru_drop_reclaims_prefix_family():
     its prefix-cache family exactly like remove_tenant does."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=1, n_slots=2, max_len=32, cold_slots=1,
-        paged=True, block_size=8, share_prefix=True,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=1, n_slots=2, max_len=32, cold_slots=1,
+            block_size=8, share_prefix=True,
+        ),
     )
     eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
     rng = np.random.default_rng(0)
@@ -388,9 +400,9 @@ def test_implicit_lru_drop_reclaims_prefix_family():
     # t2 spills t1 to the (1-slot) cold tier; t3 then needs the cold room,
     # silently dropping t1 — which must reclaim its cached prefix blocks
     eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.2))
-    assert eng.registry.is_cold("t1") and len(eng.prefix_cache) == 2
+    assert eng.lam_store.is_cold("t1") and len(eng.prefix_cache) == 2
     eng.add_tenant("t3", random_lambda(jax.random.PRNGKey(3), eng.params, 0.2))
-    assert "t1" not in eng.registry and eng.registry.lru_drops == 1
+    assert "t1" not in eng.lam_store and eng.lam_store.lru_drops == 1
     assert len(eng.prefix_cache) == 0
     assert eng.blocks_in_use() == 0, "dropped tenant's family blocks leaked"
 
@@ -406,13 +418,13 @@ _SHARD_SCRIPT = textwrap.dedent(
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import jax, numpy as np
     from repro.configs import get_reduced
-    from repro.serving import BASE_TENANT, MultiTenantEngine, random_lambda
+    from repro.serving import BASE_TENANT, EngineConfig, MultiTenantEngine, random_lambda
 
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
 
     def run(shard):
-        eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=4, max_len=32,
-                                collect_logits=True, shard_lam=shard)
+        eng = MultiTenantEngine(cfg, EngineConfig(n_lanes=2, n_slots=4, max_len=32,
+                                                  collect_logits=True, shard_lam=shard))
         for i in (1, 2):
             eng.add_tenant(f"t{i}", random_lambda(jax.random.PRNGKey(i), eng.params, 0.3))
         rng = np.random.default_rng(3)
@@ -424,7 +436,7 @@ _SHARD_SCRIPT = textwrap.dedent(
 
     eng_r, subs_r = run(False)
     eng_s, subs_s = run(True)
-    tab = next(iter(eng_s.registry._tables.values()))
+    tab = next(iter(eng_s.lam_store._tables.values()))
     shards = tab.addressable_shards
     assert len(jax.devices()) == 2, jax.devices()
     assert len(shards) == 2 and shards[0].data.shape[-2] == tab.shape[-2] // 2, (

@@ -17,7 +17,7 @@ from repro.obs import (
     write_metrics,
 )
 from repro.obs.metrics import Histogram
-from repro.serving import BASE_TENANT, MultiTenantEngine
+from repro.serving import BASE_TENANT, EngineConfig, MultiTenantEngine
 from repro.serving.paging import BlockAllocator
 
 
@@ -187,7 +187,8 @@ def test_allocator_tracks_in_use_and_peak_gauges():
 
 def _tiny_engine(**kw):
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
-    return cfg, MultiTenantEngine(cfg, n_lanes=2, n_slots=3, max_len=32, **kw)
+    econf = EngineConfig.oracle_dense(n_lanes=2, n_slots=3, max_len=32, **kw)
+    return cfg, MultiTenantEngine(cfg, econf)
 
 
 def test_engine_span_lifecycle_and_latency_histograms():
@@ -226,8 +227,11 @@ def test_engine_block_pressure_preemption_counted_once_and_stream_unaffected():
 
     def run(telemetry):
         eng = MultiTenantEngine(
-            cfg, n_lanes=2, n_slots=2, max_len=32, paged=True, block_size=8,
-            n_blocks=1 + 5, telemetry=telemetry,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=32, block_size=8,
+                n_blocks=1 + 5, telemetry=telemetry,
+            ),
         )
         a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
         b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
@@ -259,7 +263,9 @@ def test_engine_block_pressure_preemption_counted_once_and_stream_unaffected():
 
 def test_engine_quantum_preemption_recorded_per_requeue():
     cfg = get_reduced("xlstm_125m").replace(dtype="float32")
-    eng = MultiTenantEngine(cfg, n_lanes=1, n_slots=2, max_len=48, quantum=3)
+    eng = MultiTenantEngine(
+        cfg, EngineConfig(n_lanes=1, n_slots=2, max_len=48, quantum=3)
+    )
     rng = np.random.default_rng(0)
     r1 = eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=7).astype(np.int32), 9)
     r2 = eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 9)
@@ -284,8 +290,11 @@ def test_engine_quantum_preemption_recorded_per_requeue():
 def test_engine_prefix_and_cow_counters_match_attrs():
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=3, max_len=32, paged=True, block_size=8,
-        share_prefix=True,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=3, max_len=32, block_size=8,
+            share_prefix=True,
+        ),
     )
     prompt = np.arange(2, 18, dtype=np.int32)  # two full blocks
     eng.submit(BASE_TENANT, prompt, 4)
@@ -313,7 +322,7 @@ def test_engine_deferred_promotions_back_compat_property():
     # registration, and its request can't promote while t1's active
     # request pins the only hot slot → cold_promote deferral episode
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=2, max_len=32, cold_slots=4
+        cfg, EngineConfig(n_lanes=2, n_slots=2, max_len=32, cold_slots=4)
     )
     from repro.serving import random_lambda
     import jax
@@ -334,7 +343,7 @@ def test_engine_deferred_promotions_back_compat_property():
     # λ-store occupancy callbacks ride the same snapshot
     assert snap["lam_hot_slots_capacity"]["series"][0]["value"] == 1.0
     assert snap["lam_promotes_total"]["series"][0]["value"] == float(
-        eng.registry.promotes
+        eng.lam_store.promotes
     )
 
 

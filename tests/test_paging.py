@@ -9,10 +9,12 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 from repro.configs import get_reduced
-from repro.kernels import ops, ref
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_decode_attention_kernel
 from repro.serving import (
     BASE_TENANT,
     BlockAllocator,
+    EngineConfig,
     MultiTenantEngine,
     PoolExhausted,
     PrefixCache,
@@ -204,7 +206,7 @@ def test_paged_kernel_matches_gather_ref(dtype):
     vp = (jax.random.normal(KS[2], (n_blocks, bs, KV, dh)) * 0.5).astype(dtype)
     tbl = jax.random.randint(KS[3], (B, mb), 0, n_blocks)
     lens = jnp.asarray([1, 37, 64], jnp.int32)
-    o = ops.paged_decode_attention(q, kp, vp, tbl, lens)
+    o = paged_decode_attention_kernel(q, kp, vp, tbl, lens, interpret=True)
     r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lens)
     tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(
@@ -244,10 +246,10 @@ def test_paged_kernel_ignores_trash_and_stale_blocks():
     vp = jax.random.normal(KS[2], (n_blocks, bs, KV, dh), jnp.float32)
     tbl = jnp.asarray([[2, 4, 0]], jnp.int32)  # last entry = trash
     lens = jnp.asarray([11], jnp.int32)  # only blocks 0..1 + 3 positions
-    base = ops.paged_decode_attention(q, kp, vp, tbl, lens)
+    base = paged_decode_attention_kernel(q, kp, vp, tbl, lens, interpret=True)
     kp_p = kp.at[0].set(1e4).at[4, 5:].set(-1e4)  # poison trash + masked tail
     vp_p = vp.at[0].set(1e4).at[4, 5:].set(-1e4)
-    poisoned = ops.paged_decode_attention(q, kp_p, vp_p, tbl, lens)
+    poisoned = paged_decode_attention_kernel(q, kp_p, vp_p, tbl, lens, interpret=True)
     np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), atol=1e-6)
 
 
@@ -258,8 +260,11 @@ def test_paged_kernel_ignores_trash_and_stale_blocks():
 
 def _run_engine(cfg, paged, specs, rng_seed=3, **kw):
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=4, max_len=48, collect_logits=True,
-        paged=paged, block_size=8, **kw,
+        cfg,
+        EngineConfig(
+            layout="paged" if paged else "oracle_dense", n_lanes=2, n_slots=4,
+            max_len=48, collect_logits=True, block_size=8, **kw,
+        ),
     )
     lams = {BASE_TENANT: base_lambda(eng.params)}
     for i in (1, 2):
@@ -315,8 +320,11 @@ def test_engine_pool_exhaustion_defers_then_completes():
     second request (strict FIFO) until retirement frees blocks."""
     cfg = get_reduced("smollm-135m")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=3, max_len=32, paged=True, block_size=8,
-        n_blocks=1 + 2,  # 2 usable blocks
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=3, max_len=32, block_size=8,
+            n_blocks=1 + 2,  # 2 usable blocks
+        ),
     )
     eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 8)  # 2 blocks
     eng.submit(BASE_TENANT, np.arange(2, 12, dtype=np.int32), 6)  # 2 blocks
@@ -333,8 +341,11 @@ def test_engine_pool_exhaustion_defers_then_completes():
 def test_engine_rejects_never_admittable_request():
     cfg = get_reduced("smollm-135m")
     eng = MultiTenantEngine(
-        cfg, n_lanes=1, n_slots=2, max_len=32, paged=True, block_size=8,
-        n_blocks=1 + 2,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=1, n_slots=2, max_len=32, block_size=8,
+            n_blocks=1 + 2,
+        ),
     )
     with pytest.raises(ValueError):  # 24 tokens → 3 blocks > capacity 2
         eng.submit(BASE_TENANT, np.arange(2, 18, dtype=np.int32), 8)
@@ -343,10 +354,15 @@ def test_engine_rejects_never_admittable_request():
 def test_engine_paged_memory_below_dense_for_short_traffic():
     """The point of paging: pool sized to traffic beats lanes×max_len."""
     cfg = get_reduced("smollm-135m")
-    dense = MultiTenantEngine(cfg, n_lanes=4, n_slots=2, max_len=256)
+    dense = MultiTenantEngine(
+        cfg, EngineConfig.oracle_dense(n_lanes=4, n_slots=2, max_len=256)
+    )
     paged = MultiTenantEngine(
-        cfg, n_lanes=4, n_slots=2, max_len=256, paged=True, block_size=16,
-        n_blocks=1 + 4 * 2,  # 4 lanes × 2 blocks (≤32-token requests)
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=4, n_slots=2, max_len=256, block_size=16,
+            n_blocks=1 + 4 * 2,  # 4 lanes × 2 blocks (≤32-token requests)
+        ),
     )
     assert paged.kv_cache_bytes() < dense.kv_cache_bytes()
 
@@ -360,8 +376,12 @@ def _run_prefix_engine(cfg, share_prefix, specs, *, lanes=2, n_blocks=None, seed
     """Engine run where tenants t1/t1b share one λ checkpoint (a tenant
     *family*) and t2 is distinct; ``specs`` entries are (tenant, prompt)."""
     eng = MultiTenantEngine(
-        cfg, n_lanes=lanes, n_slots=6, max_len=48, collect_logits=True,
-        paged=True, block_size=8, n_blocks=n_blocks, share_prefix=share_prefix,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=lanes, n_slots=6, max_len=48,
+            collect_logits=True, block_size=8, n_blocks=n_blocks,
+            share_prefix=share_prefix,
+        ),
     )
     fam_lam = random_lambda(jax.random.PRNGKey(1), eng.params, scale=0.3)
     eng.add_tenant("t1", fam_lam)
@@ -439,8 +459,11 @@ def test_engine_shared_prefix_footprint_is_one_prefix_plus_tails():
     peaks = {}
     for share in (False, True):
         eng = MultiTenantEngine(
-            cfg, n_lanes=lanes, n_slots=6, max_len=64, paged=True,
-            block_size=bs, share_prefix=share,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=lanes, n_slots=6, max_len=64,
+                block_size=bs, share_prefix=share,
+            ),
         )
         fam = random_lambda(jax.random.PRNGKey(1), eng.params, scale=0.2)
         for i in range(lanes):
@@ -462,8 +485,11 @@ def test_engine_gate_pins_matches_against_same_round_eviction():
     PoolExhausted escaping run()."""
     cfg = get_reduced("smollm-135m")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=2, max_len=32, paged=True, block_size=8,
-        n_blocks=1 + 4, share_prefix=True,
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=2, max_len=32, block_size=8,
+            n_blocks=1 + 4, share_prefix=True,
+        ),
     )
     rng = np.random.default_rng(2)
     shared = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)  # 2 blocks
@@ -486,7 +512,8 @@ def test_engine_lazy_growth_allocates_prompt_only():
     blocks one boundary at a time."""
     cfg = get_reduced("smollm-135m")
     eng = MultiTenantEngine(
-        cfg, n_lanes=1, n_slots=2, max_len=64, paged=True, block_size=8,
+        cfg,
+        EngineConfig(layout="paged", n_lanes=1, n_slots=2, max_len=64, block_size=8),
     )
     eng.submit(BASE_TENANT, np.arange(2, 14, dtype=np.int32), 24)  # P=12
     eng.step()  # prefill + first decode: write pos 12 sits in the tail block
@@ -508,8 +535,11 @@ def test_engine_preemption_frees_youngest_and_recovers():
 
     def run(n_blocks):
         eng = MultiTenantEngine(
-            cfg, n_lanes=2, n_slots=2, max_len=32, collect_logits=True,
-            paged=True, block_size=8, n_blocks=n_blocks,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=32,
+                collect_logits=True, block_size=8, n_blocks=n_blocks,
+            ),
         )
         a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
         b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
@@ -535,8 +565,11 @@ def test_engine_cow_fork_on_shared_write_block():
 
     def run(tamper):
         eng = MultiTenantEngine(
-            cfg, n_lanes=1, n_slots=2, max_len=32, collect_logits=True,
-            paged=True, block_size=8,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=1, n_slots=2, max_len=32,
+                collect_logits=True, block_size=8,
+            ),
         )
         req = eng.submit(BASE_TENANT, np.arange(2, 14, dtype=np.int32), 6)  # P=12
         eng.step()  # admit; tail block (positions 8..11) is private
@@ -565,7 +598,9 @@ def test_prefill_bucketing_bounds_compilations():
     """10 requests at 10 distinct prompt lengths must share ≤4 prefill
     compilations (power-of-two buckets), not compile one prefill each."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
-    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=64)
+    eng = MultiTenantEngine(
+        cfg, EngineConfig.oracle_dense(n_lanes=2, n_slots=2, max_len=64)
+    )
     rng = np.random.default_rng(0)
     lengths = [3, 5, 6, 9, 11, 14, 17, 21, 26, 31]  # 10 distinct lengths
     for P in lengths:
@@ -584,7 +619,8 @@ def test_prefill_bucketing_preserves_logits():
     as the unpadded merged-weight reference decode."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=1, n_slots=2, max_len=32, collect_logits=True
+        cfg,
+        EngineConfig.oracle_dense(n_lanes=1, n_slots=2, max_len=32, collect_logits=True),
     )
     prompt = np.arange(2, 13, dtype=np.int32)  # length 11 → bucket 16
     eng.submit(BASE_TENANT, prompt, 3)
@@ -595,3 +631,176 @@ def test_prefill_bucketing_preserves_logits():
     )
     assert req.tokens == ref_toks
     np.testing.assert_allclose(np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-block kernel: bit-identity sweep + zero-length lanes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mb,lens",
+    [
+        (1, [7]),                  # single block, ragged tail
+        (2, [16, 9]),              # exact block boundary + mid-block
+        (4, [1, 37, 64]),          # one position / ragged / full table
+        (8, [111, 64, 3, 57]),     # deep table, mixed raggedness
+    ],
+    ids=["1blk", "2blk", "4blk", "8blk"],
+)
+def test_fused_paged_kernel_bit_identical_to_ref(mb, lens):
+    """The fused multi-block kernel (scalar-prefetched block-table walk,
+    online softmax) must be *bit-identical* to the XLA gather oracle —
+    it is the decode path of every paged engine."""
+    B = len(lens)
+    H, KV, dh, bs = 8, 2, 64, 16
+    n_blocks = 1 + B * mb
+    q = jax.random.normal(KS[0], (B, H, dh), jnp.float32) * 0.5
+    kp = jax.random.normal(KS[1], (n_blocks, bs, KV, dh), jnp.float32) * 0.5
+    vp = jax.random.normal(KS[2], (n_blocks, bs, KV, dh), jnp.float32) * 0.5
+    tbl = jax.random.randint(KS[3], (B, mb), 1, n_blocks)
+    lengths = jnp.asarray(lens, jnp.int32)
+    o = paged_decode_attention_kernel(q, kp, vp, tbl, lengths, interpret=True)
+    r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lengths)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+
+
+def test_fused_paged_kernel_zero_length_lane_emits_zeros():
+    """Idle lanes (length 0, all-trash tables) must produce finite output —
+    exactly zeros — where the gather oracle softmaxes over nothing (NaN)."""
+    B, H, KV, dh, bs, mb = 3, 4, 2, 32, 8, 2
+    q = jax.random.normal(KS[4], (B, H, dh), jnp.float32)
+    kp = jax.random.normal(KS[5], (5, bs, KV, dh), jnp.float32)
+    vp = jax.random.normal(KS[6], (5, bs, KV, dh), jnp.float32)
+    tbl = jnp.asarray([[1, 2], [0, 0], [3, 0]], jnp.int32)
+    lens = jnp.asarray([11, 0, 5], jnp.int32)
+    o = np.asarray(paged_decode_attention_kernel(q, kp, vp, tbl, lens, interpret=True))
+    r = np.asarray(ref.paged_decode_attention_ref(q, kp, vp, tbl, lens))
+    np.testing.assert_array_equal(o[1], 0.0)
+    np.testing.assert_array_equal(o[0], r[0])
+    np.testing.assert_array_equal(o[2], r[2])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: bit-equality, preemption, prefix-skip
+# ---------------------------------------------------------------------------
+
+
+def _run_chunked(cfg, specs, *, prefill_chunk, rng_seed=3, **kw):
+    eng = MultiTenantEngine(
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=4, max_len=128, block_size=16,
+            collect_logits=True, prefill_chunk=prefill_chunk, **kw,
+        ),
+    )
+    lams = {BASE_TENANT: base_lambda(eng.params)}
+    lams["t1"] = random_lambda(jax.random.PRNGKey(1), eng.params, scale=0.3)
+    eng.add_tenant("t1", lams["t1"])
+    rng = np.random.default_rng(rng_seed)
+    reqs = {}
+    for t, P, G in specs:
+        prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+        r = eng.submit(t, prompt, G)
+        reqs[r.uid] = (t, prompt, G)
+    done = eng.run()
+    return eng, reqs, done
+
+
+CHUNK_SPECS = [(BASE_TENANT, 37, 6), ("t1", 50, 5), ("t1", 9, 4), (BASE_TENANT, 60, 3)]
+
+
+def test_chunked_prefill_bit_identical_to_monolithic():
+    """Splitting admission prefill into block-aligned chunks interleaved
+    with resident decode steps is a scheduling change only: every request's
+    tokens AND logits must match the monolithic-prefill engine bitwise."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    _, mono_reqs, mono_done = _run_chunked(cfg, CHUNK_SPECS, prefill_chunk=None)
+    eng, chunk_reqs, chunk_done = _run_chunked(cfg, CHUNK_SPECS, prefill_chunk=16)
+    assert mono_done.keys() == chunk_done.keys()
+    for uid in mono_done:
+        assert mono_done[uid].tokens == chunk_done[uid].tokens, f"uid={uid}"
+        np.testing.assert_array_equal(
+            np.stack(mono_done[uid].logits), np.stack(chunk_done[uid].logits)
+        )
+    assert eng.allocator.n_free == eng.allocator.capacity
+    # the chunk machinery actually ran, and telemetry saw it
+    snap = eng.metrics()
+    assert snap["serve_prefill_chunk_ms"]["series"][0]["count"] >= 2
+    phases = {s["labels"]["phase"] for s in snap["serve_step_phase_ms"]["series"]}
+    assert "prefill_chunk" in phases
+    spans = {
+        e["name"]
+        for e in eng.telemetry.tracer.to_chrome()["traceEvents"]
+        if e["ph"] == "X"
+    }
+    assert "prefill_chunk" in spans
+
+
+def test_chunked_prefill_mid_chunk_preemption_recovers():
+    """Block pressure while a lane is still mid-prefill must preempt it
+    cleanly (chunk progress discarded, blocks freed) and re-derive its
+    output exactly once re-admitted."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+
+    def run(n_blocks):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=64, block_size=8,
+                collect_logits=True, prefill_chunk=8, n_blocks=n_blocks,
+            ),
+        )
+        a = eng.submit(BASE_TENANT, np.arange(2, 17, dtype=np.int32), 6)  # P=15
+        b = eng.submit(BASE_TENANT, np.arange(20, 52, dtype=np.int32), 4)  # P=32
+        done = eng.run()
+        assert eng.allocator.n_free == eng.allocator.capacity
+        return eng, done[a.uid], done[b.uid]
+
+    _, a_big, b_big = run(n_blocks=1 + 12)  # uncontended
+    # 6 usable blocks: a (2) + b (4) fit, but a's growth at position 16
+    # lands while b is still chunking its 32-token prompt → b preempted
+    eng, a, b = run(n_blocks=1 + 6)
+    assert eng.preemptions >= 1 and b.preemptions >= 1 and a.preemptions == 0
+    names = b.trace.names()
+    assert names.index("preempt") < names.index("prefill"), (
+        "victim was not mid-prefill when preempted"
+    )
+    for got, want in ((a, a_big), (b, b_big)):
+        assert got.tokens == want.tokens
+        np.testing.assert_array_equal(np.stack(got.logits), np.stack(want.logits))
+
+
+def test_chunked_prefill_skips_cached_prefix_blocks():
+    """A chunked prefill over a prefix-cache hit must not recompute the
+    cached blocks: chunk starts skip them (or collapse to one logits-only
+    pass when the whole prompt is cached) with bit-identical outputs."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    rng = np.random.default_rng(5)
+    pre = rng.integers(2, cfg.vocab_size, size=32).astype(np.int32)  # 2 blocks
+    tail = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+
+    def run(prefill_chunk):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=1, n_slots=2, max_len=64, block_size=16,
+                collect_logits=True, share_prefix=True,
+                prefill_chunk=prefill_chunk,
+            ),
+        )
+        subs = []
+        subs.append(eng.submit(BASE_TENANT, pre, 4))  # seeds the prefix cache
+        eng.run()
+        subs.append(eng.submit(BASE_TENANT, pre, 4))  # fully cached prompt
+        eng.run()
+        subs.append(eng.submit(BASE_TENANT, np.concatenate([pre, tail]), 4))
+        eng.run()  # cached prefix + uncached ragged tail
+        return eng, subs
+
+    eng_m, mono = run(prefill_chunk=None)
+    eng_c, chunked = run(prefill_chunk=16)
+    assert eng_c.prefix_cache.hits == eng_m.prefix_cache.hits > 0
+    for rm, rc in zip(mono, chunked):
+        assert rm.tokens == rc.tokens
+        np.testing.assert_array_equal(np.stack(rm.logits), np.stack(rc.logits))

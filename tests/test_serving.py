@@ -1,4 +1,4 @@
-"""Multi-tenant serving subsystem: registry eviction/hot-swap, scheduler
+"""Multi-tenant serving subsystem: λ-store eviction/hot-swap, scheduler
 admission & batch composition, the batched multi-λ kernel vs the XLA take
 reference, and the engine vs per-tenant merged-weight decodes."""
 import jax
@@ -10,8 +10,9 @@ from repro.configs import get_reduced
 from repro.kernels import ops, ref
 from repro.serving import (
     BASE_TENANT,
-    AdapterRegistry,
     ContinuousBatchScheduler,
+    EngineConfig,
+    LamStore,
     MultiTenantEngine,
     base_lambda,
     random_lambda,
@@ -36,7 +37,7 @@ def _lam_tree(value):
 
 
 def test_registry_slot0_and_allocation():
-    reg = AdapterRegistry(SHAPES, n_slots=4)
+    reg = LamStore(SHAPES, n_slots=4)
     assert BASE_TENANT in reg and reg.lookup(BASE_TENANT) == 0
     s1 = reg.register("a", _lam_tree(1.0))
     s2 = reg.register("b", _lam_tree(2.0))
@@ -49,7 +50,7 @@ def test_registry_slot0_and_allocation():
 
 
 def test_registry_lru_eviction_and_pinning():
-    reg = AdapterRegistry(SHAPES, n_slots=3)  # slots 1,2 usable
+    reg = LamStore(SHAPES, n_slots=3)  # slots 1,2 usable
     sa = reg.register("a", _lam_tree(1.0))
     sb = reg.register("b", _lam_tree(2.0))
     reg.lookup("a")  # touch: b is now LRU
@@ -68,7 +69,7 @@ def test_registry_lru_eviction_and_pinning():
 
 
 def test_registry_hot_swap_and_install():
-    reg = AdapterRegistry(SHAPES, n_slots=3)
+    reg = LamStore(SHAPES, n_slots=3)
     s = reg.register("a", _lam_tree(1.0))
     v0 = reg.version
     assert reg.register("a", _lam_tree(9.0)) == s  # hot-swap, same slot
@@ -88,7 +89,7 @@ def test_registry_hot_swap_and_install():
 
 
 def test_registry_hot_swap_pinned_raises():
-    reg = AdapterRegistry(SHAPES, n_slots=3)
+    reg = LamStore(SHAPES, n_slots=3)
     s = reg.register("a", _lam_tree(1.0))
     reg.pin("a")
     with pytest.raises(RuntimeError):  # would mix adapters mid-generation
@@ -99,7 +100,7 @@ def test_registry_hot_swap_pinned_raises():
 
 
 def test_registry_base_slot_immutable():
-    reg = AdapterRegistry(SHAPES, n_slots=2)
+    reg = LamStore(SHAPES, n_slots=2)
     with pytest.raises(ValueError):
         reg.register(BASE_TENANT, _lam_tree(1.0))
     with pytest.raises(ValueError):
@@ -107,7 +108,7 @@ def test_registry_base_slot_immutable():
 
 
 def test_registry_explicit_evict_scrubs_slot():
-    reg = AdapterRegistry(SHAPES, n_slots=3)
+    reg = LamStore(SHAPES, n_slots=3)
     s = reg.register("a", _lam_tree(7.0))
     reg.evict("a")
     assert "a" not in reg
@@ -195,7 +196,10 @@ def test_qrlora_bgmv_per_sequence_ids():
 
 def test_engine_mixed_batch_matches_merged_reference():
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
-    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=4, max_len=40, collect_logits=True)
+    eng = MultiTenantEngine(
+        cfg,
+        EngineConfig.oracle_dense(n_lanes=2, n_slots=4, max_len=40, collect_logits=True),
+    )
     rng = np.random.default_rng(3)
     lams = {BASE_TENANT: base_lambda(eng.params)}
     for i in (1, 2):
@@ -227,19 +231,21 @@ def test_engine_queued_tenant_survives_registration_pressure():
     """submit() pins its tenant, so registering new tenants while the
     request is still queued must evict someone else (or refuse)."""
     cfg = get_reduced("smollm-135m")
-    eng = MultiTenantEngine(cfg, n_lanes=1, n_slots=3, max_len=24)  # 2 usable
+    eng = MultiTenantEngine(
+        cfg, EngineConfig(n_lanes=1, n_slots=3, max_len=24, block_size=8)
+    )  # 2 usable slots; auto layout → paged
     eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.1))
     eng.submit("t1", np.arange(2, 6), 2)  # queued, pins t1
     eng.add_tenant("t2", random_lambda(jax.random.PRNGKey(2), eng.params, 0.1))
     eng.add_tenant("t3", random_lambda(jax.random.PRNGKey(3), eng.params, 0.1))
-    assert "t1" in eng.registry and "t2" not in eng.registry  # t2 was LRU
+    assert "t1" in eng.lam_store and "t2" not in eng.lam_store  # t2 was LRU
     done = eng.run()
     assert len(done) == 1 and len(next(iter(done.values())).tokens) == 2
 
 
 def test_engine_rejects_unknown_tenant_and_overflow():
     cfg = get_reduced("smollm-135m")
-    eng = MultiTenantEngine(cfg, n_lanes=1, n_slots=2, max_len=16)
+    eng = MultiTenantEngine(cfg, EngineConfig(n_lanes=1, n_slots=2, max_len=16))
     with pytest.raises(KeyError):
         eng.submit("ghost", np.arange(4), 4)
     with pytest.raises(ValueError):
@@ -252,10 +258,14 @@ def test_engine_rejects_unknown_tenant_and_overflow():
 # ---------------------------------------------------------------------------
 
 
-def _run_family_engine(arch, specs, **engine_kw):
+def _run_family_engine(arch, specs, **config_kw):
     cfg = get_reduced(arch).replace(dtype="float32")
+    config_kw.setdefault("layout", "oracle_dense")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=4, max_len=48, collect_logits=True, **engine_kw
+        cfg,
+        EngineConfig(
+            n_lanes=2, n_slots=4, max_len=48, collect_logits=True, **config_kw
+        ),
     )
     lams = {BASE_TENANT: base_lambda(eng.params)}
     for i in (1, 2):
@@ -282,7 +292,7 @@ FAMILY_SPECS = [(BASE_TENANT, 6, 4), ("t1", 9, 5), ("t2", 7, 3), ("t1", 13, 4)]
     [
         ("xlstm_125m", {}),                                    # ssm: no KV at all
         ("jamba_1_5_large_398b", {}),                          # hybrid, dense lanes
-        ("jamba_1_5_large_398b", dict(paged=True, block_size=8)),  # hybrid, paged attn
+        ("jamba_1_5_large_398b", dict(layout="paged", block_size=8)),  # hybrid, paged
     ],
     ids=["xlstm", "hybrid-dense", "hybrid-paged"],
 )
@@ -299,7 +309,7 @@ def test_engine_recurrent_families_match_merged_reference(arch, kw):
         np.testing.assert_allclose(
             np.stack(req.logits), ref_logits, atol=1e-4, rtol=1e-4
         )
-    if kw.get("paged"):
+    if kw.get("layout") == "paged":
         assert eng.allocator.n_free == eng.allocator.capacity, "blocks leaked"
 
 
@@ -310,7 +320,7 @@ def test_engine_hybrid_paged_bit_identical_to_dense():
         "jamba_1_5_large_398b", FAMILY_SPECS
     )
     _, eng, _, paged_reqs, paged_done = _run_family_engine(
-        "jamba_1_5_large_398b", FAMILY_SPECS, paged=True, block_size=8
+        "jamba_1_5_large_398b", FAMILY_SPECS, layout="paged", block_size=8
     )
     for uid in dense_done:
         assert dense_done[uid].tokens == paged_done[uid].tokens, f"uid={uid}"
@@ -326,8 +336,11 @@ def test_engine_hybrid_paged_preemption_recovers():
 
     def run(n_blocks):
         eng = MultiTenantEngine(
-            cfg, n_lanes=2, n_slots=2, max_len=32, collect_logits=True,
-            paged=True, block_size=8, n_blocks=n_blocks,
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=32,
+                collect_logits=True, block_size=8, n_blocks=n_blocks,
+            ),
         )
         a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
         b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
@@ -346,13 +359,16 @@ def test_engine_hybrid_paged_preemption_recovers():
 
 def test_engine_family_gates():
     with pytest.raises(NotImplementedError):  # vlm: per-lane image embeds
-        MultiTenantEngine(get_reduced("llama_3_2_vision_11b"), n_lanes=1, n_slots=2)
-    with pytest.raises(ValueError, match="has none"):  # ssm has no KV to page
-        MultiTenantEngine(get_reduced("xlstm_125m"), n_lanes=1, n_slots=2, paged=True)
-    with pytest.raises(ValueError, match="dense layout"):  # quantum needs dense
         MultiTenantEngine(
-            get_reduced("smollm-135m"), n_lanes=1, n_slots=2, paged=True, quantum=2
+            get_reduced("llama_3_2_vision_11b"), EngineConfig(n_lanes=1, n_slots=2)
         )
+    with pytest.raises(ValueError, match="has none"):  # ssm has no KV to page
+        MultiTenantEngine(
+            get_reduced("xlstm_125m"),
+            EngineConfig(layout="paged", n_lanes=1, n_slots=2),
+        )
+    with pytest.raises(ValueError, match="dense layout"):  # quantum needs dense
+        EngineConfig(layout="paged", n_lanes=1, n_slots=2, quantum=2)
 
 
 # ---------------------------------------------------------------------------
@@ -369,8 +385,11 @@ def test_engine_quantum_round_robin_is_bit_identical():
 
     def run(quantum):
         eng = MultiTenantEngine(
-            cfg, n_lanes=1, n_slots=3, max_len=48, collect_logits=True,
-            quantum=quantum,
+            cfg,
+            EngineConfig(
+                n_lanes=1, n_slots=3, max_len=48, collect_logits=True,
+                quantum=quantum,
+            ),
         )
         eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.3))
         rng = np.random.default_rng(0)
@@ -400,7 +419,7 @@ def test_engine_stream_yields_every_token_in_decode_order():
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
 
     def build():
-        eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=3, max_len=32)
+        eng = MultiTenantEngine(cfg, EngineConfig(n_lanes=2, n_slots=3, max_len=32))
         eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.2))
         rng = np.random.default_rng(7)
         subs = []
@@ -435,8 +454,11 @@ def test_engine_stream_is_exactly_once_under_preemption():
     stream() must not deliver the already-surfaced indexes twice."""
     cfg = get_reduced("smollm-135m").replace(dtype="float32")
     eng = MultiTenantEngine(
-        cfg, n_lanes=2, n_slots=2, max_len=32, paged=True, block_size=8,
-        n_blocks=1 + 5,  # two 3-block requests collide crossing position 16
+        cfg,
+        EngineConfig(
+            layout="paged", n_lanes=2, n_slots=2, max_len=32, block_size=8,
+            n_blocks=1 + 5,  # two 3-block requests collide crossing position 16
+        ),
     )
     a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
     b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
@@ -455,7 +477,9 @@ def test_engine_quantum_preempts_at_most_one_lane_per_waiter():
     """One waiting request must not churn the whole batch: only the most
     overdue lane is snapshot-preempted, the rest keep decoding."""
     cfg = get_reduced("xlstm_125m").replace(dtype="float32")
-    eng = MultiTenantEngine(cfg, n_lanes=2, n_slots=2, max_len=32, quantum=2)
+    eng = MultiTenantEngine(
+        cfg, EngineConfig(n_lanes=2, n_slots=2, max_len=32, quantum=2)
+    )
     rng = np.random.default_rng(1)
     for _ in range(3):  # 2 lanes + 1 waiter
         eng.submit(BASE_TENANT, rng.integers(2, cfg.vocab_size, size=5).astype(np.int32), 8)
