@@ -185,11 +185,19 @@ _ICON = {"ok": "✅", "warn": "⚠️", "fail": "❌", "ignored": "➖", "new": 
 def render_markdown(deltas: List[Delta], *, max_ratio: float, min_us: float) -> str:
     fails = sum(d.status == "fail" for d in deltas)
     warns = sum(d.status == "warn" for d in deltas)
+    news = sum(d.status == "new" for d in deltas)
+    # "new" is called out in the headline, not buried in the table: a
+    # benchmark's first run has no baseline, and silently classifying it
+    # used to make e.g. a freshly-wired bench look omitted from the gate
+    headline = (
+        f"{len(deltas)} metrics — **{fails} fail**, {warns} warn"
+        + (f", {news} new" if news else "")
+        + f" (fail: >{max_ratio:g}x on baselines >{min_us:g}µs)."
+    )
     lines = [
         "## Benchmark trajectory",
         "",
-        f"{len(deltas)} metrics — **{fails} fail**, {warns} warn "
-        f"(fail: >{max_ratio:g}x on baselines >{min_us:g}µs).",
+        headline,
         "",
         "| metric | baseline µs | current µs | ratio | status |",
         "| --- | ---: | ---: | ---: | --- |",
@@ -252,6 +260,11 @@ def main(argv=None) -> int:
         with open(args.summary, "a") as f:
             f.write(md)
     print(md)
+    for d in deltas:
+        # a bench's first run has no baseline row to regress against — say
+        # so out loud instead of letting it vanish from the job log
+        if d.status == "new":
+            print(f"NEW {d.name}: {d.current:.1f}µs (no baseline yet)")
     fails = [d for d in deltas if d.status == "fail"]
     if fails:
         for d in fails:

@@ -18,7 +18,9 @@ oracle layout for it).  CLI flags map 1:1 onto
 / ``--n-blocks`` / ``--share-prefix`` / ``--watermark`` /
 ``--prefill-chunk`` configure the paged layout; ``--quantum`` (time-slice
 fairness via lane-state snapshots) needs the dense oracle layout and
-shines for recurrent families whose per-lane state is O(1).
+shines for recurrent families whose per-lane state is O(1);
+``--speculate-k`` / ``--draft-lam-rank`` turn on speculative decoding via
+the slot-0 base drafter (attention-only families, token-identical output).
 
     PYTHONPATH=src python -m repro.launch.serve_multi --reduced --tenants 4
     PYTHONPATH=src python -m repro.launch.serve_multi --reduced \\
@@ -102,6 +104,20 @@ def main(argv=None):
         "CPU with XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
     ap.add_argument(
+        "--speculate-k", type=int, default=0, metavar="K",
+        help="speculative decoding: draft K tokens per lane per step with "
+        "the free slot-0 base drafter (λ ≡ 0 — same weights, same KV "
+        "blocks), batch-verify under the full multi-λ view, accept the "
+        "longest matching greedy prefix (token-identical output, up to K+1 "
+        "tokens per host round-trip; 0 disables)",
+    )
+    ap.add_argument(
+        "--draft-lam-rank", type=int, default=None, metavar="R",
+        help="drafter variant: keep only the top-R |λ| coefficients per "
+        "tenant slot instead of dropping the adapter entirely (needs "
+        "--speculate-k >= 1; default: λ ≡ 0 base drafter)",
+    )
+    ap.add_argument(
         "--quantum", type=int, default=None,
         help="time-slice fairness: snapshot-preempt a lane after this many "
         "decode steps while requests queue (dense layout only; exact "
@@ -178,6 +194,8 @@ def main(argv=None):
         shard_lam=args.shard_lam,
         telemetry=not args.no_telemetry,
         prefill_chunk=args.prefill_chunk,
+        speculate_k=args.speculate_k,
+        draft_lam_rank=args.draft_lam_rank,
     )
     engine = MultiTenantEngine(cfg, econf)
     print(f"[serve_multi] family={cfg.family} layout={engine.layout}")
@@ -245,6 +263,16 @@ def main(argv=None):
     if args.quantum is not None:
         print(f"[serve_multi] quantum={args.quantum}: "
               f"{engine.slice_preemptions} snapshot time-slices")
+    if args.speculate_k:
+        print(
+            f"[serve_multi] speculative k={args.speculate_k}"
+            + (f" draft_lam_rank={args.draft_lam_rank}"
+               if args.draft_lam_rank else " (base drafter)")
+            + f": {engine.drafted_tokens} drafted, "
+            f"{engine.accepted_drafts} accepted "
+            f"(acceptance={engine.acceptance_rate:.0%}) over "
+            f"{engine.spec_steps} draft+verify steps"
+        )
     if args.cold_slots:
         print(
             f"[serve_multi] λ churn: {reg.spills} spills, {reg.promotes} "

@@ -165,18 +165,31 @@ def attention(
     cache: Optional[Dict] = None,
     cross_kv: Optional[jax.Array] = None,
     attend_blocks: Optional[int] = None,
+    n_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (output (B,S,d), updated cache or None).
 
     * ``cache=None``                — train / encoder path.
     * ``cache`` with ``S > 1``      — prefill: fills the cache.
     * ``cache`` with ``S == 1``     — decode: reads + appends one position.
+    * ``cache`` with ``n_valid``    — speculative verify: S = k+1 window
+                                      positions per lane (see below).
     * ``cross_kv``                  — cross-attention (no cache, no rope).
 
     ``attend_blocks`` (static) bounds the paged decode attend to the first
     that-many block-table columns — the engine passes the active lanes'
     block high-water mark so attend cost tracks live sequence lengths, not
     ``max_len`` (bit-identical: masked tail columns contribute exact zeros).
+
+    ``n_valid`` (int32 (B,)) switches the per-lane cache paths into
+    *speculative verify* mode: ``x`` holds each lane's draft window (the
+    last committed token followed by its drafted continuation) fed at that
+    lane's own absolute positions ``idx[b] .. idx[b]+S-1``, and row ``s``
+    of the output attends exactly to what a single-token decode at position
+    ``idx[b]+s`` would see.  Rows at or past a lane's ``n_valid`` write
+    nothing (scatter-dropped / trash-redirected), and the cache offsets are
+    returned UNCHANGED — the serving engine commits each lane's accepted
+    advance separately after comparing drafts against the greedy argmax.
     """
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     B, S = x.shape[:2]
@@ -192,6 +205,12 @@ def attention(
 
     new_cache = None
     if cache is not None and not is_cross:
+        if n_valid is not None:  # speculative verify: S-token window per lane
+            if "block_tbl" in cache:
+                return _paged_verify(
+                    p, q, k, v, cache, cfg, adp, scale, sdt, n_valid, attend_blocks
+                )
+            return _dense_verify(p, q, k, v, cache, cfg, adp, scale, sdt, n_valid)
         if "block_tbl" in cache:  # paged KV cache (block pool + table)
             if S != 1:  # block-aligned prefill: scatter straight into pool blocks
                 return _paged_prefill(p, q, k, v, cache, cfg, adp, scale, sdt, positions)
@@ -360,6 +379,102 @@ def _paged_decode(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt,
         mask = (kpos[None, :] < lengths[:, None])[:, None, None, None, :]
         out = _softmax_attend(q, kg, vg, mask, scale, decode=True, scores_dtype=sdt)
     o = adapted_matmul(out.reshape(B, 1, H * dh), p["wo"], (adp or {}).get("wo"))
+    return shard(o, "batch", None, None), new_cache
+
+
+def _dense_verify(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt, n_valid):
+    """Speculative verify against a dense per-lane cache: W window rows per
+    lane at positions ``idx[b] .. idx[b]+W-1``.
+
+    Writes use a flat scatter whose index is forced out of range for rows
+    ``s >= n_valid[b]`` (``mode="drop"``), so idle lanes and lanes near
+    their generation budget write nothing.  Row ``s``'s mask is
+    ``kpos <= idx+s`` — exactly the single-token decode mask at that
+    position, so row ``s`` is what decode would compute after committing
+    the window's first ``s`` tokens; rejected rows leave stale K/V that
+    stays masked until a later window overwrites it.  ``idx`` is returned
+    UNCHANGED — the engine advances it by the accepted length.
+    """
+    B, W = q.shape[:2]
+    H, dh = cfg.n_heads, cfg.d_head
+    idx = cache["idx"]
+    L = cache["k"].shape[1]
+    nm = _decode_shard_names(cfg)
+    q = shard(q, "batch", None, *nm)
+    k = shard(k, "batch", None, *nm)
+    v = shard(v, "batch", None, *nm)
+    pos = idx[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    valid = jnp.arange(W)[None, :] < n_valid[:, None]
+    flat = jnp.where(valid, jnp.arange(B)[:, None] * L + pos, B * L)
+    ck = cache["k"].reshape(B * L, *cache["k"].shape[2:])
+    cv = cache["v"].reshape(B * L, *cache["v"].shape[2:])
+    ck = ck.at[flat.reshape(-1)].set(
+        k.reshape(B * W, *k.shape[2:]).astype(ck.dtype), mode="drop"
+    ).reshape(cache["k"].shape)
+    cv = cv.at[flat.reshape(-1)].set(
+        v.reshape(B * W, *v.shape[2:]).astype(cv.dtype), mode="drop"
+    ).reshape(cache["v"].shape)
+    new_cache = {"k": ck, "v": cv, "idx": idx}
+    kpos = jnp.arange(L)
+    mask = (kpos[None, None, :] <= pos[:, :, None])[:, None, None]  # (B,1,1,W,L)
+    out = _softmax_attend(
+        q, ck.astype(q.dtype), cv.astype(q.dtype), mask, scale, decode=True,
+        scores_dtype=sdt,
+    )
+    o = adapted_matmul(out.reshape(B, W, H * dh), p["wo"], (adp or {}).get("wo"))
+    return shard(o, "batch", None, None), new_cache
+
+
+def _paged_verify(p, q, k, v, cache, cfg: ModelConfig, adp, scale, sdt, n_valid,
+                  attend_blocks: Optional[int] = None):
+    """Speculative verify against the paged pool: W window rows per lane
+    scattered through its block table at ``idx .. idx+W-1``.
+
+    Rows ``s >= n_valid[b]`` have their block forced to trash block 0 — a
+    lane whose window exceeds its owned blocks (or an idle lane) scribbles
+    only on trash, never forking or touching a shared block.  The attend
+    always takes the XLA gather path (the Pallas paged kernel is
+    single-query); ``attend_blocks`` truncation and the per-row mask
+    ``kpos <= min(idx+s, width-1)`` reproduce ``_paged_decode``'s reduction
+    exactly, so live rows are bit-identical to the single-token decode at
+    the same position.  ``idx`` is returned UNCHANGED — the engine commits
+    accepted advances and decref/trash-repoints past-the-end blocks.
+    """
+    B, W = q.shape[:2]
+    H, dh = cfg.n_heads, cfg.d_head
+    n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
+    tbl, idx = cache["block_tbl"], cache["idx"]
+    max_blocks = tbl.shape[1]
+    nm = _decode_shard_names(cfg)
+    q = shard(q, "batch", None, *nm)
+    k = shard(k, "batch", None, *nm)
+    v = shard(v, "batch", None, *nm)
+
+    pos = idx[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    valid = jnp.arange(W)[None, :] < n_valid[:, None]
+    blk = jnp.take_along_axis(tbl, jnp.clip(pos // bs, 0, max_blocks - 1), axis=1)
+    blk = jnp.where(valid, blk, 0)  # invalid rows → trash block
+    flat = (blk * bs + pos % bs).reshape(-1)
+    kp = cache["k"].reshape(n_blocks * bs, *cache["k"].shape[2:])
+    vp = cache["v"].reshape(n_blocks * bs, *cache["v"].shape[2:])
+    kp = kp.at[flat].set(k.reshape(B * W, *k.shape[2:]).astype(kp.dtype))
+    vp = vp.at[flat].set(v.reshape(B * W, *v.shape[2:]).astype(vp.dtype))
+    kp = shard(kp.reshape(cache["k"].shape), None, None, *nm)
+    vp = shard(vp.reshape(cache["v"].shape), None, None, *nm)
+    new_cache = {"k": kp, "v": vp, "block_tbl": tbl, "idx": idx}
+
+    a_blocks = max_blocks
+    if attend_blocks is not None and attend_blocks < max_blocks:
+        a_blocks = max(attend_blocks, 1)
+        tbl = tbl[:, :a_blocks]
+    kg = kp[tbl].reshape(B, a_blocks * bs, *kp.shape[2:]).astype(q.dtype)
+    vg = vp[tbl].reshape(B, a_blocks * bs, *vp.shape[2:]).astype(q.dtype)
+    kpos = jnp.arange(a_blocks * bs)
+    mask = (
+        kpos[None, None, :] <= jnp.minimum(pos, a_blocks * bs - 1)[:, :, None]
+    )[:, None, None]  # (B,1,1,W,a_blocks*bs)
+    out = _softmax_attend(q, kg, vg, mask, scale, decode=True, scores_dtype=sdt)
+    o = adapted_matmul(out.reshape(B, W, H * dh), p["wo"], (adp or {}).get("wo"))
     return shard(o, "batch", None, None), new_cache
 
 

@@ -175,6 +175,16 @@ class Model:
             image_embeds=image_embeds, seg_ids=seg_ids, attend_blocks=attend_blocks,
         )
 
+    def verify_step(self, params, cache, tokens=None, seg_ids=None, n_valid=None,
+                    attend_blocks=None):
+        """Speculative verify: ``tokens`` (B, W) windows at each lane's own
+        positions → (logits (B, W, V), cache with offsets UNCHANGED).
+        Attention-only families (see ``transformer.decoder_verify``)."""
+        return tfm_lib.decoder_verify(
+            params, self.cfg, cache, tokens=tokens, seg_ids=seg_ids,
+            n_valid=n_valid, attend_blocks=attend_blocks,
+        )
+
     # ---- PEFT helpers ------------------------------------------------------
     def trainable_mask(self, params, extra_trainable=()):
         extra = tuple(extra_trainable)

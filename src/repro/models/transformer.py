@@ -173,7 +173,7 @@ def _ckpt(fn, train: bool):
 
 def _group_body(
     cfg: ModelConfig, p, x, cache_sl, positions, img, decode, train=False, seg_ids=None,
-    length=None, attend_blocks=None,
+    length=None, attend_blocks=None, n_valid=None,
 ):
     fam = cfg.family
     adapters = p.get("adapters")
@@ -186,7 +186,7 @@ def _group_body(
             p["attn"], h, cfg, positions=positions,
             adp=_adp_for(adapters, "attn", seg_ids),
             cache=cache_sl.get("attn") if cache_sl else None,
-            attend_blocks=attend_blocks,
+            attend_blocks=attend_blocks, n_valid=n_valid,
         )
         if nc is not None:
             new_cache["attn"] = nc
@@ -335,7 +335,7 @@ def _embed_input(params, cfg, tokens, embeds):
 
 def _run_groups(
     params, cfg: ModelConfig, x, positions, cache, img, decode, train, seg_ids=None,
-    length=None, attend_blocks=None,
+    length=None, attend_blocks=None, n_valid=None,
 ):
     groups = params["groups"]
 
@@ -345,6 +345,7 @@ def _run_groups(
         x, new_c, a = _group_body(
             cfg, p, x, cache_sl, positions, img, decode, train=train and cfg.remat,
             seg_ids=seg_ids, length=length, attend_blocks=attend_blocks,
+            n_valid=n_valid,
         )
         return (x, aux + a), new_c
 
@@ -665,3 +666,38 @@ def decoder_decode(
         "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
     )
     return logits[:, 0], {"pos": cache["pos"] + 1, "layers": new_layers}
+
+
+def decoder_verify(
+    params, cfg: ModelConfig, cache, tokens=None, seg_ids=None, n_valid=None,
+    attend_blocks=None,
+):
+    """Speculative verify: one forward over ``tokens`` (B, W) — each lane's
+    last committed token followed by its drafted continuation — at absolute
+    positions ``pos[b] .. pos[b]+W-1``, returning the logits of ALL W rows
+    (``(B, W, V)``).
+
+    Row ``s`` attends to every cache position ``<= pos+s`` (the window's
+    own earlier rows included, freshly scattered), so its logits are
+    exactly what :func:`decoder_decode` would produce after committing the
+    window's first ``s`` tokens — greedy acceptance is then plain prefix
+    equality against the per-row argmax.  ``n_valid`` (int32 (B,)) caps how
+    many rows each lane writes into its cache (0 for idle lanes); offsets
+    (``pos``/``idx``) come back UNCHANGED — the serving engine advances
+    them by each lane's accepted length in a separate commit, then rolls
+    back paged blocks the acceptance never reached.  Attention-only
+    families (no recurrent state to rewind); the engine gates speculation
+    accordingly.
+    """
+    x = _embed_input(params, cfg, tokens, None)
+    W = x.shape[1]
+    positions = cache["pos"][:, None] + jnp.arange(W)[None, :]
+    x, _, new_layers = _run_groups(
+        params, cfg, x, positions, cache["layers"], None, decode=True, train=False,
+        seg_ids=seg_ids, attend_blocks=attend_blocks, n_valid=n_valid,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.dtype(cfg.logits_dtype)
+    )
+    return logits, {"pos": cache["pos"], "layers": new_layers}

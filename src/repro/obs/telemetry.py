@@ -44,6 +44,10 @@ from typing import Any, Dict, Optional
 from repro.obs.metrics import DEFAULT_MS_BUCKETS, MetricsRegistry
 from repro.obs.tracing import PID_ENGINE, PID_QUEUE, RequestTrace, Tracer
 
+#: Engine-track thread id for whole-step spans (draft/verify) that belong to
+#: no single lane — rendered above the lane rows in the trace viewer.
+TID_STEP = -1
+
 
 class Telemetry:
     def __init__(self, enabled: bool = True, *, trace: Optional[bool] = None,
@@ -94,6 +98,21 @@ class Telemetry:
             "serve_prefix_hits_total", "prefix-cache blocks adopted at admission")
         self.prefix_misses = m.counter(
             "serve_prefix_misses_total", "full prompt blocks prefilled uncached")
+        # speculative decoding: per-step acceptance-rate distribution plus
+        # monotonic token-fate counters (drafted = accepted + rolled_back)
+        self.spec_acceptance = m.histogram(
+            "serve_spec_acceptance",
+            "per-step fraction of drafted tokens accepted",
+            buckets=(0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0))
+        self.spec_drafted = m.counter(
+            "serve_spec_drafted_total", "draft tokens proposed")
+        self.spec_accepted = m.counter(
+            "serve_spec_accepted_total", "draft tokens the verify pass accepted")
+        self.spec_rolled_back = m.counter(
+            "serve_spec_rolled_back_total",
+            "draft tokens rejected and rolled back")
+        if self.tracer:
+            self.tracer.thread_name(PID_ENGINE, TID_STEP, "step")
 
     # -- clock --------------------------------------------------------------
 
@@ -237,6 +256,27 @@ class Telemetry:
             self.tracer.instant(
                 "cow_fork", PID_ENGINE, req.lane,
                 args={"uid": req.uid, "src_block": src, "dst_block": dst})
+
+    # -- speculative decoding -----------------------------------------------
+
+    def on_speculate(self, drafted: int, accepted: int,
+                     rolled_back: int) -> None:
+        """One speculative step's token fates across all lanes; the engine
+        calls this exactly once per speculative ``step()``."""
+        if not self.enabled:
+            return
+        self.spec_drafted.inc(drafted)
+        self.spec_accepted.inc(accepted)
+        self.spec_rolled_back.inc(rolled_back)
+        if drafted:
+            self.spec_acceptance.observe(accepted / drafted)
+
+    def on_spec_phase(self, name: str, t0: float, t1: float) -> None:
+        """A whole-step draft/verify span: a ``step_phase`` observation plus
+        a step-track trace span (no single lane owns it)."""
+        self.phase(name, t1 - t0)
+        if self.tracer:
+            self.tracer.complete(name, PID_ENGINE, TID_STEP, t0, t1 - t0)
 
     # -- step phases --------------------------------------------------------
 

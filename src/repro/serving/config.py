@@ -45,6 +45,13 @@ from repro.models.transformer import PAGED_FAMILIES
 
 LAYOUTS = ("auto", "paged", "oracle_dense")
 
+#: Families speculative decoding supports.  Accepting a drafted prefix is a
+#: pure KV rewind — offsets advance, rejected positions stay masked until
+#: overwritten — which only attention state allows.  Hybrid's Mamba scan
+#: state advances irreversibly per token and ssm has no KV cache at all, so
+#: neither can roll back a rejected draft.
+SPECULATIVE_FAMILIES = ("dense", "audio", "moe")
+
 #: Engine keywords accepted before EngineConfig existed, in their historical
 #: order.  ``paged`` maps onto ``layout``; everything else is 1:1.
 LEGACY_KWARGS = (
@@ -78,6 +85,19 @@ class EngineConfig:
     #: time-between-tokens under long-prompt admission.  ``None`` disables
     #: (monolithic admission prefill).  Must be a multiple of ``block_size``.
     prefill_chunk: Optional[int] = None
+    #: Speculative decoding: draft this many tokens per lane per step with
+    #: the slot-0 base drafter (λ ≡ 0 — shares every weight and KV block),
+    #: verify all lanes' drafts in one batched forward, and accept the
+    #: longest matching greedy prefix.  ``0`` disables.  Token-identical to
+    #: plain greedy decode by construction; requires a family in
+    #: :data:`SPECULATIVE_FAMILIES` (checked at engine construction).
+    speculate_k: int = 0
+    #: Drafter variant: keep only the top-r |λ| coefficients per tenant slot
+    #: instead of dropping the adapter entirely — a principled smaller model
+    #: under the paper's QR-basis structure, trading drafter cost for
+    #: acceptance rate on strongly-adapted tenants.  ``None`` = λ ≡ 0 base
+    #: drafter.  Needs ``speculate_k >= 1``.
+    draft_lam_rank: Optional[int] = None
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -113,6 +133,25 @@ class EngineConfig:
                     f"prefill_chunk={self.prefill_chunk} must be a positive "
                     f"multiple of block_size={self.block_size}"
                 )
+        if self.speculate_k < 0:
+            raise ValueError(f"speculate_k={self.speculate_k} must be >= 0")
+        if self.speculate_k and self.prefill_chunk is not None:
+            raise ValueError(
+                "speculate_k is incompatible with prefill_chunk: a lane mid "
+                "chunked-prefill is dark (its interim decode writes land in "
+                "the trash block) and cannot draft or verify a window — run "
+                "monolithic admission prefill with speculation"
+            )
+        if self.draft_lam_rank is not None:
+            if self.draft_lam_rank < 1:
+                raise ValueError(
+                    f"draft_lam_rank={self.draft_lam_rank} must be >= 1"
+                )
+            if self.speculate_k < 1:
+                raise ValueError(
+                    "draft_lam_rank configures the speculative drafter — it "
+                    "needs speculate_k >= 1"
+                )
         if self.layout == "oracle_dense":
             if self.share_prefix:
                 raise ValueError(
@@ -141,6 +180,18 @@ class EngineConfig:
         if self.quantum is not None or family not in PAGED_FAMILIES:
             return "oracle_dense"
         return "paged"
+
+    def validate_speculation(self, family: str) -> None:
+        """Reject ``speculate_k`` for families whose decode state cannot
+        rewind a rejected draft (engine construction calls this once the
+        model family is known — the config itself is family-agnostic)."""
+        if self.speculate_k and family not in SPECULATIVE_FAMILIES:
+            raise ValueError(
+                f"speculate_k={self.speculate_k} needs a KV-rollback family "
+                f"{SPECULATIVE_FAMILIES}; family {family!r} carries "
+                "recurrent decode state that cannot rewind rejected draft "
+                "positions"
+            )
 
     # -- presets ------------------------------------------------------------
 

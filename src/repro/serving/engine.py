@@ -65,6 +65,23 @@ lane that has decoded N tokens while others queue is snapshot-preempted
 back of the queue and later *restored* instead of re-prefilled, so long
 generations round-robin with waiting requests at zero recompute.
 
+``speculate_k=K`` adds **speculative decoding** for attention-only
+families: the QR-LoRA structure makes the drafter free — slot 0's zero-λ
+base tenant shares every weight and KV block with its targets, so drafting
+is just the same forward with the per-token BGMV *skipped* (or, with
+``draft_lam_rank=r``, with all but the top-r λ coefficients zeroed).  Each
+step drafts K greedy tokens per lane in one dispatch (through a throwaway
+cache copy — JAX's functional updates make draft rollback structural),
+verifies every lane's (K+1)-token window in one batched multi-position
+forward under the full multi-λ view, and accepts each lane's longest
+matching prefix.  Greedy decode is bit-deterministic, so acceptance is
+exact prefix equality — output is token-identical to the plain engine, at
+up to K+1 tokens per host round-trip.  Rejected positions roll back as
+pure bookkeeping: dense offsets simply don't advance past the acceptance
+(stale rows stay masked until overwritten), and paged lanes decref their
+unreached pre-grown window blocks back to the pool (growth never CoW-forks
+beyond the write block, so rollback never has to undo a fork).
+
 ``prefill_chunk=N`` (chunked prefill, paged layouts) keeps admission off
 the decode critical path: a long prompt is split into N-token chunks
 processed one (budgeted) chunk per engine step, interleaved with resident
@@ -260,6 +277,16 @@ class MultiTenantEngine:
         self.paged = paged
         self.quantum = quantum
         self.slice_preemptions = 0  # quantum snapshot-preemptions
+        # speculative decoding: families whose decode state is pure KV can
+        # rewind a rejected draft (offsets retreat, stale rows stay masked);
+        # hybrid's Mamba scan and ssm's recurrent state cannot.
+        config.validate_speculation(cfg.family)
+        self.speculate_k = config.speculate_k
+        self.draft_lam_rank = config.draft_lam_rank
+        self.spec_steps = 0  # speculative engine steps executed
+        self.drafted_tokens = 0  # draft tokens proposed across all lanes
+        self.accepted_drafts = 0  # drafted tokens the verify pass accepted
+        self._draft_view_cache = None  # (λ-store version, drafter view)
         self.events: List[TokenEvent] = []  # tokens decoded by the last step()
         # chunked prefill: paged layouts of chunk-safe families only; hybrid
         # (Mamba scan spans the prompt) silently prefills monolithically
@@ -428,6 +455,47 @@ class MultiTenantEngine:
             attn = {"k": k, "v": v, "block_tbl": tbl, "idx": a["idx"]}
             return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
 
+        spec_k = config.speculate_k
+
+        def _draft(view, cache, tok, seg, attend_blocks):
+            """Draft ``spec_k`` greedy tokens per lane in ONE dispatch,
+            threading a LOCAL copy of the cache through the unrolled steps.
+            JAX is functional, so the engine's cache never sees the draft
+            writes — draft "rollback" is structural, not an operation."""
+            toks = []
+            t = tok
+            for _ in range(spec_k):
+                logits, cache = model.decode_step(
+                    view, cache, token=t, seg_ids=seg,
+                    attend_blocks=attend_blocks,
+                )
+                t = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                toks.append(t[:, 0])
+            return jnp.stack(toks, axis=1)  # (lanes, spec_k)
+
+        def _verify(view, cache, window, seg, n_valid, attend_blocks):
+            """Score each lane's (k+1)-token window in one multi-position
+            forward under the full multi-λ view.  The returned cache holds
+            every window position's K/V but UNCHANGED offsets — the host
+            commits each lane's accepted advance separately."""
+            logits, cache = model.verify_step(
+                view, cache, tokens=window, seg_ids=seg, n_valid=n_valid,
+                attend_blocks=attend_blocks,
+            )
+            return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def _commit_advance(cache, adv):
+            """Advance each lane's KV write offset and position by its
+            accepted length.  Window rows past the acceptance stay masked
+            (attends read ``kpos <= idx``) until later steps overwrite them
+            — that masking IS the dense-layout KV rollback."""
+            a = cache["layers"]["attn"]
+            attn = {**a, "idx": a["idx"] + adv[None, :]}
+            return {
+                "pos": cache["pos"] + adv,
+                "layers": {**cache["layers"], "attn": attn},
+            }
+
         # model-forward jits trace adapted_matmul, which consults the
         # logical-axis rules for the λ-table sharding — keep the rule
         # context active around every call (the tracing one included)
@@ -441,6 +509,10 @@ class MultiTenantEngine:
         self._prefill_chunk_final = self._with_rules(jax.jit(_prefill_chunk_final))
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
+        if spec_k:
+            self._draft = self._with_rules(jax.jit(_draft, static_argnums=(4,)))
+            self._verify = self._with_rules(jax.jit(_verify, static_argnums=(5,)))
+            self._commit_advance = jax.jit(_commit_advance)
 
         # engine-level callback metrics: sampled only at snapshot() time,
         # zero hot-path cost.  The jit compile counts hook the same
@@ -463,9 +535,12 @@ class MultiTenantEngine:
                      lambda: len(self.prefill_buckets),
                      help="distinct padded prompt lengths prefilled "
                           "(= prefill compilations under bucketing)")
-        for _n, _f in (("prefill", self._prefill), ("decode", self._decode),
-                       ("prefill_paged", self._prefill_paged),
-                       ("prefill_chunk", self._prefill_chunk)):
+        jits = [("prefill", self._prefill), ("decode", self._decode),
+                ("prefill_paged", self._prefill_paged),
+                ("prefill_chunk", self._prefill_chunk)]
+        if spec_k:
+            jits += [("draft", self._draft), ("verify", self._verify)]
+        for _n, _f in jits:
             _cs = getattr(_f, "_cache_size", None)
             if callable(_cs):
                 reg.callback(f"serve_jit_compiles_{_n}", _cs, kind="counter",
@@ -527,6 +602,38 @@ class MultiTenantEngine:
     def _params_view(self) -> Pytree:
         # LamStore.install() memoizes on (params identity, version) itself
         return self.lam_store.install(self.params)
+
+    def _draft_params_view(self) -> Pytree:
+        """Drafter parameter view.  Base drafter (``draft_lam_rank=None``):
+        strip the adapters entirely — exactly the λ ≡ 0 slot-0 tenant,
+        with the per-token BGMV *skipped* rather than multiplied by zeros.
+        Truncated-λ drafter (``draft_lam_rank=r``): keep only each slot
+        row's top-r |λ| coefficients — OSoRA's singular-value-coefficient
+        reading of the QR basis makes that a principled smaller model.
+        Memoized on the λ-store version (slot writes invalidate)."""
+        view = self._params_view()
+        if self.draft_lam_rank is None:
+            return {**view, "groups": {**view["groups"], "adapters": {}}}
+        ver = self.lam_store.version
+        if self._draft_view_cache is not None and self._draft_view_cache[0] == ver:
+            return self._draft_view_cache[1]
+        r = self.draft_lam_rank
+
+        def trunc(leaf):
+            lam = leaf["lam"]
+            if lam.shape[-1] <= r:
+                return leaf
+            mag = jnp.abs(lam)
+            thr = jnp.sort(mag, axis=-1)[..., -r][..., None]
+            return {**leaf, "lam": jnp.where(mag >= thr, lam, jnp.zeros_like(lam))}
+
+        adapters = {
+            mod: {proj: trunc(leaf) for proj, leaf in projs.items()}
+            for mod, projs in view["groups"]["adapters"].items()
+        }
+        dview = {**view, "groups": {**view["groups"], "adapters": adapters}}
+        self._draft_view_cache = (ver, dview)
+        return dview
 
     # -- requests -----------------------------------------------------------
 
@@ -693,10 +800,15 @@ class MultiTenantEngine:
         self.scheduler.preempt(req, to_back=True, keep_progress=True)
         self.slice_preemptions += 1
 
-    def _grow_lanes(self) -> None:
-        """Lazy growth, oldest lane first: give every active lane the block
-        its next decode write lands in, allocating (or CoW-forking a shared
-        block) on block-boundary crossings."""
+    def _grow_lanes(self, window: int = 1) -> None:
+        """Lazy growth, oldest lane first: give every active lane the blocks
+        its next ``window`` decode writes land in, allocating (or CoW-forking
+        a shared block) on block-boundary crossings.  Speculative engines
+        grow k+1 positions of headroom at once; only the *write-position*
+        block is ever forked (acceptance always reaches it, so the plain
+        engine forks it too) — a shared block deeper in the window instead
+        caps that lane's draft window at the boundary (_spec_window_cap),
+        so speculative rollback never has to undo a CoW fork."""
         bs = self.block_size
         for req in sorted(self.scheduler.active(), key=lambda r: r.admit_seq):
             if req.lane < 0:  # preempted by an older lane's growth this pass
@@ -704,28 +816,154 @@ class MultiTenantEngine:
             if req.uid in self._prefilling:  # not decoding yet — no growth
                 continue
             write_pos = req.prompt.size + len(req.tokens) - 1
-            blk_idx = write_pos // bs
+            span = max(min(window, req.max_new_tokens - len(req.tokens)), 1)
+            first_blk = write_pos // bs
+            last_blk = (write_pos + span - 1) // bs
             blocks = self._lane_blocks[req.lane]
-            if blk_idx >= len(blocks):
-                bid = self._reclaim_one_block(req)
-                if bid is None:
-                    continue
-                blocks.append(bid)
-                self.cache = self._append_block(self.cache, req.lane, blk_idx, bid)
-            elif self.allocator.is_shared(blocks[blk_idx]):
-                # copy-on-write: never write into a block someone else reads
-                src = blocks[blk_idx]
-                if self.allocator.can_alloc(1):
-                    dst = self.allocator.fork(src)
-                else:
-                    dst = self._reclaim_one_block(req)
-                    if dst is None:
-                        continue
-                    self.allocator.decref(src)  # lane's ref moves to the copy
-                blocks[blk_idx] = dst
-                self.cache = self._fork_block(self.cache, req.lane, blk_idx, src, dst)
-                self.cow_forks += 1
-                self.telemetry.on_cow_fork(req, src, dst)
+            for blk_idx in range(first_blk, last_blk + 1):
+                if blk_idx >= len(blocks):
+                    bid = self._reclaim_one_block(req)
+                    if bid is None:  # req itself was the preemption victim
+                        break
+                    blocks.append(bid)
+                    self.cache = self._append_block(
+                        self.cache, req.lane, blk_idx, bid
+                    )
+                elif self.allocator.is_shared(blocks[blk_idx]):
+                    if blk_idx != first_blk:
+                        # shared block deeper in the speculative window:
+                        # leave it — the window caps at this boundary
+                        break
+                    # copy-on-write: never write into a block someone else
+                    # reads
+                    src = blocks[blk_idx]
+                    if self.allocator.can_alloc(1):
+                        dst = self.allocator.fork(src)
+                    else:
+                        dst = self._reclaim_one_block(req)
+                        if dst is None:
+                            break
+                        self.allocator.decref(src)  # lane's ref moves to the copy
+                    blocks[blk_idx] = dst
+                    self.cache = self._fork_block(
+                        self.cache, req.lane, blk_idx, src, dst
+                    )
+                    self.cow_forks += 1
+                    self.telemetry.on_cow_fork(req, src, dst)
+
+    # -- speculative decoding ------------------------------------------------
+
+    def _spec_window_cap(self, req: Request) -> int:
+        """Largest verify window (free token + drafts) this lane can take
+        this step: bounded by its remaining generation budget and, paged,
+        by the blocks it actually owns — growth stops at the first shared
+        block past the write block (forking it just to maybe roll it back
+        would desync refcounts from the plain engine) and may come up short
+        under pool pressure."""
+        nv = min(self.speculate_k + 1, req.max_new_tokens - len(req.tokens))
+        if not self.paged:
+            return max(nv, 1)
+        bs = self.block_size
+        write_pos = req.prompt.size + len(req.tokens) - 1
+        blocks = self._lane_blocks[req.lane]
+        limit_blk = len(blocks)
+        for i in range(write_pos // bs + 1, len(blocks)):
+            if self.allocator.is_shared(blocks[i]):
+                limit_blk = i
+                break
+        return max(1, min(nv, limit_blk * bs - write_pos))
+
+    def _rollback_window_blocks(self, decoding, adv) -> None:
+        """Release window blocks past each lane's accepted frontier — the
+        pre-grown headroom a short acceptance didn't reach.  Those are
+        always fresh private allocations (growth forks only the write
+        block, and every step restores the covers-exactly-the-KV block
+        invariant), so a decref + trash-repoint restores exact refcount
+        parity with the plain engine; no CoW fork is ever undone."""
+        bs = self.block_size
+        for req in decoding:
+            lane = req.lane
+            # pre-emit: len(tokens) is still the pre-step count, so this is
+            # the lane's post-commit write offset
+            idx_new = req.prompt.size + len(req.tokens) - 1 + int(adv[lane])
+            keep = (idx_new - 1) // bs + 1  # plain-engine post-step coverage
+            blocks = self._lane_blocks[lane]
+            while len(blocks) > keep:
+                slot = len(blocks) - 1
+                self.allocator.decref(blocks.pop())
+                self.cache = self._append_block(self.cache, lane, slot, 0)
+
+    def _step_speculative(self, decoding, tok, ab, finished, t) -> None:
+        """One speculative decode step: draft k tokens per lane with the
+        cheap drafter view (one dispatch, throwaway cache), verify every
+        lane's (k+1)-token window under the full multi-λ view (one
+        dispatch), accept each lane's longest greedy-matching prefix, then
+        commit offsets and roll back paged blocks past the accepted
+        frontier.  Greedy decode is bit-deterministic, so prefix equality
+        is *exact* acceptance — the emitted tokens and logits rows are
+        identical to the plain engine's, delivered up to k+1 at a time."""
+        tel = self.telemetry
+        on = tel.enabled
+        k = self.speculate_k
+        seg = jnp.asarray(self.scheduler.batch_composition())
+        view = self._params_view()
+        dview = self._draft_params_view()
+        t_disp = tel.now() if on else 0.0
+        drafts = np.asarray(
+            self._draft(dview, self.cache, jnp.asarray(tok), seg, ab)
+        )  # host sync fences the draft dispatch
+        if on:
+            tel.on_spec_phase("draft", t_disp, tel.now())
+        window = np.zeros((self.n_lanes, k + 1), np.int32)
+        window[:, 0] = tok[:, 0]
+        window[:, 1:] = drafts
+        n_valid = np.zeros((self.n_lanes,), np.int32)
+        for req in decoding:
+            n_valid[req.lane] = self._spec_window_cap(req)
+        t_ver = tel.now() if on else 0.0
+        logits, greedy, cache = self._verify(
+            view, self.cache, jnp.asarray(window), seg,
+            jnp.asarray(n_valid), ab,
+        )
+        logits_np = np.asarray(logits)  # host sync: the verify really ran
+        greedy_np = np.asarray(greedy)
+        t_sync = tel.now() if on else 0.0
+        if on:
+            tel.on_spec_phase("verify", t_ver, t_sync)
+        adv = np.zeros((self.n_lanes,), np.int32)
+        for req in decoding:
+            lane, nv = req.lane, int(n_valid[req.lane])
+            a = 1  # window[0] is the lane's own last token — always accepted
+            while a < nv and window[lane, a] == greedy_np[lane, a - 1]:
+                a += 1
+            adv[lane] = a
+        self.cache = self._commit_advance(cache, jnp.asarray(adv))
+        if self.paged:
+            self._rollback_window_blocks(decoding, adv)
+        self.steps += 1
+        self.spec_steps += 1
+        drafted = k * len(decoding)
+        accepted = int(adv.sum()) - len(decoding)
+        self.drafted_tokens += drafted
+        self.accepted_drafts += accepted
+        tel.on_speculate(drafted, accepted, drafted - accepted)
+        for req in decoding:
+            lane, a = req.lane, int(adv[req.lane])
+            req.slice_steps += a  # quantum accounting in accepted TOKENS
+            for j in range(a):
+                self._emit(req, logits_np[lane, j], finished)
+            if on:
+                tel.on_decode_lane(req, t_disp, t_sync, req.tokens[-1])
+        if on:
+            tel.phase("emit", tel.now() - t_sync)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify pass accepted (0.0 before
+        any speculative step has run)."""
+        if not self.drafted_tokens:
+            return 0.0
+        return self.accepted_drafts / self.drafted_tokens
 
     # -- the serving loop ---------------------------------------------------
 
@@ -984,8 +1222,9 @@ class MultiTenantEngine:
         """Time-slice over-quantum lanes (when work queues), admit waiting
         requests, advance chunked prefills under the token budget, grow/
         CoW-fork lanes crossing block boundaries, run one shared decode step
-        over the committed lanes; returns requests that finished this step.
-        Per-token events land in ``self.events``."""
+        over the committed lanes (a draft+verify pair when ``speculate_k``
+        is set — up to k+1 tokens per lane per step); returns requests that
+        finished this step.  Per-token events land in ``self.events``."""
         finished: List[Request] = []
         self.events = []
         tel = self.telemetry
@@ -1019,7 +1258,7 @@ class MultiTenantEngine:
                 tel.phase("prefill_chunk", now - t)
                 t = now
         if self.paged:
-            self._grow_lanes()
+            self._grow_lanes(self.speculate_k + 1 if self.speculate_k else 1)
             if on:
                 now = tel.now()
                 tel.phase("grow", now - t)
@@ -1057,6 +1296,9 @@ class MultiTenantEngine:
             while ab < hw:
                 ab *= 2
             ab = min(ab, self.max_blocks)
+        if self.speculate_k:
+            self._step_speculative(decoding, tok, ab, finished, t)
+            return finished
         seg = jnp.asarray(self.scheduler.batch_composition())
         view = self._params_view()
         t_disp = tel.now() if on else 0.0

@@ -30,7 +30,11 @@ class Request:
     slot: int = -1  # adapter slot id (0 = base model)
     admit_seq: int = -1  # admission ordinal (preemption picks the youngest)
     preemptions: int = 0
-    slice_steps: int = 0  # decode steps since (re-)admission (time-slicing)
+    # accepted tokens decoded since (re-)admission (time-slicing quantum);
+    # equals decode steps on a plain engine, but a speculative engine
+    # advances it by the accepted window length so quantum fairness is
+    # accounted in tokens produced, not host round-trips
+    slice_steps: int = 0
     # chunked prefill (paged engines, prefill_chunk=N): absolute prompt
     # position the next chunk starts at, -1 when not mid-prefill — the lane
     # holds no decodable token while this is >= 0

@@ -41,6 +41,10 @@ def test_config_defaults_are_auto_layout():
         dict(layout="paged", prefill_chunk=8),  # below one block
         dict(layout="oracle_dense", share_prefix=True),
         dict(layout="oracle_dense", watermark=1),
+        dict(speculate_k=-1),
+        dict(draft_lam_rank=4),  # a drafter needs speculate_k >= 1
+        dict(speculate_k=2, draft_lam_rank=0),
+        dict(layout="paged", speculate_k=2, prefill_chunk=16),  # verify vs chunk
     ],
     ids=lambda kw: ",".join(f"{k}={v}" for k, v in kw.items()),
 )

@@ -589,6 +589,41 @@ def test_engine_cow_fork_on_shared_write_block():
     assert eng.allocator.n_free == eng.allocator.capacity
 
 
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 4), n_blocks=st.integers(5, 9), seed=st.integers(0, 50))
+def test_engine_speculative_rollback_conserves_blocks(k, n_blocks, seed):
+    """Property: whatever (draft depth, pool size, traffic) throws at the
+    speculative engine — window growth, rejected-draft rollback, preemption
+    under pressure — its tokens match the plain paged engine and the block
+    pool drains back to a full free list (refcounts exact, nothing leaked
+    to the trash table or double-freed)."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    rng = np.random.default_rng(seed)
+    specs = [
+        (int(rng.integers(3, 12)), int(rng.integers(4, 9)))
+        for _ in range(int(rng.integers(2, 5)))
+    ]
+
+    def run(speculate_k):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=24,
+                block_size=8, n_blocks=n_blocks, speculate_k=speculate_k,
+            ),
+        )
+        subs = [
+            eng.submit(BASE_TENANT, rng2.integers(2, cfg.vocab_size, size=P).astype(np.int32), G)
+            for rng2 in [np.random.default_rng(seed + 1)]
+            for P, G in specs
+        ]
+        done = eng.run()
+        assert eng.allocator.n_free == eng.allocator.capacity, "blocks leaked"
+        return [done[r.uid].tokens for r in subs]
+
+    assert run(k) == run(0)
+
+
 # ---------------------------------------------------------------------------
 # prompt-length bucketing
 # ---------------------------------------------------------------------------

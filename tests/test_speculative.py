@@ -1,0 +1,215 @@
+"""Speculative decoding via the slot-0 base drafter: exact-acceptance
+spec-vs-plain token identity across layouts (paged, oracle_dense), under
+quantum preemption mid-draft, with shared prefixes and pool-pressure
+preemption; the truncated-λ drafter; telemetry exactly-once accounting;
+and the family gate for recurrent decode state.
+
+Logits are compared with ``allclose(atol=1e-4)`` rather than bitwise: the
+verify pass reduces attention over a (lanes, k+1) window, which associates
+float sums differently than the single-row decode step (~3e-6 drift).
+Tokens — the acceptance criterion — must match exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.serving import (
+    BASE_TENANT,
+    EngineConfig,
+    MultiTenantEngine,
+    random_lambda,
+)
+from repro.serving.config import SPECULATIVE_FAMILIES
+
+
+# mixed tenants, heterogeneous prompt/generation lengths, lane reuse
+SPEC_SPECS = [(BASE_TENANT, 6, 8), ("t1", 9, 10), ("t2", 7, 6), ("t1", 5, 8)]
+
+
+def _run_engine(cfg, specs, *, rng_seed=3, n_tenants=2, **config_kw):
+    config_kw.setdefault("n_lanes", 2)
+    config_kw.setdefault("n_slots", 4)
+    config_kw.setdefault("max_len", 48)
+    config_kw.setdefault("collect_logits", True)
+    eng = MultiTenantEngine(cfg, EngineConfig(**config_kw))
+    for i in range(1, n_tenants + 1):
+        eng.add_tenant(f"t{i}", random_lambda(jax.random.PRNGKey(i), eng.params, 0.3))
+    rng = np.random.default_rng(rng_seed)
+    reqs = {}
+    for t, P, G in specs:
+        prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
+        r = eng.submit(t, prompt, G)
+        reqs[r.uid] = (t, prompt, G)
+    done = eng.run()
+    assert done.keys() == reqs.keys()
+    return eng, done
+
+
+def _assert_same_outputs(plain_done, spec_done):
+    for uid in plain_done:
+        assert plain_done[uid].tokens == spec_done[uid].tokens, f"uid={uid}"
+        np.testing.assert_allclose(
+            np.stack(plain_done[uid].logits),
+            np.stack(spec_done[uid].logits),
+            atol=1e-4, rtol=0,
+        )
+
+
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("layout", ["paged", "oracle_dense"])
+def test_speculative_matches_plain_greedy(layout, k):
+    """The tentpole acceptance bar: a speculative engine's output is
+    token-identical to the plain greedy engine in both KV layouts, with
+    mixed tenants sharing the decode batch."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    kw = dict(layout=layout)
+    if layout == "paged":
+        kw["block_size"] = 8
+    _, plain_done = _run_engine(cfg, SPEC_SPECS, **kw)
+    eng, spec_done = _run_engine(cfg, SPEC_SPECS, speculate_k=k, **kw)
+    _assert_same_outputs(plain_done, spec_done)
+    assert eng.spec_steps > 0 and eng.drafted_tokens >= k * eng.spec_steps // 2
+    # slot-0 drafts against adapter lanes still accept *something*: the
+    # shared QR basis keeps draft and target distributions close
+    assert 0.0 < eng.acceptance_rate <= 1.0
+    if layout == "paged":
+        assert eng.allocator.n_free == eng.allocator.capacity, "blocks leaked"
+
+
+def test_speculative_quantum_preemption_matches_plain():
+    """Quantum expiry mid-generation (accounted in accepted tokens, not
+    host steps) snapshots and restores lanes without corrupting the
+    speculative window: outputs still match the plain engine."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    kw = dict(layout="oracle_dense", n_lanes=1, quantum=3)
+    specs = [(BASE_TENANT, 6, 9), ("t1", 5, 9)]
+    _, plain_done = _run_engine(cfg, specs, **kw)
+    eng, spec_done = _run_engine(cfg, specs, speculate_k=3, **kw)
+    _assert_same_outputs(plain_done, spec_done)
+    assert eng.slice_preemptions >= 1, "quantum never fired mid-draft"
+
+
+def test_speculative_share_prefix_matches_plain():
+    """Prefix-cache hits seed lanes with shared (refcount > 1) blocks; the
+    fork-only-first-block growth policy must keep spec output identical and
+    the pool exactly conserved."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    rng = np.random.default_rng(5)
+    pre = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)  # 2 blocks
+
+    def run(k):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=48, block_size=8,
+                collect_logits=True, share_prefix=True, speculate_k=k,
+            ),
+        )
+        subs = [eng.submit(BASE_TENANT, pre, 6)]  # seeds the prefix cache
+        eng.run()
+        subs.append(eng.submit(BASE_TENANT, pre, 6))  # fully cached prompt
+        subs.append(eng.submit(BASE_TENANT, pre[:8], 6))  # partial prefix
+        eng.run()
+        return eng, subs
+
+    eng_plain, plain = run(k=0)
+    eng, spec = run(k=3)
+    assert eng.prefix_cache.hits == eng_plain.prefix_cache.hits > 0
+    # the prefix cache retains its blocks past drain; speculation must hold
+    # exactly the same residual refcounts as the plain engine
+    assert eng.allocator.n_free == eng_plain.allocator.n_free
+    for rp, rs in zip(plain, spec):
+        assert rp.tokens == rs.tokens
+        np.testing.assert_allclose(
+            np.stack(rp.logits), np.stack(rs.logits), atol=1e-4, rtol=0
+        )
+
+
+def test_speculative_tight_pool_preemption_recovers():
+    """Block pressure under speculation preempts the youngest lane with its
+    in-flight window rolled back: refcounts stay exact (full free list
+    after drain) and every request re-derives its plain-engine tokens."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+
+    def run(k, n_blocks):
+        eng = MultiTenantEngine(
+            cfg,
+            EngineConfig(
+                layout="paged", n_lanes=2, n_slots=2, max_len=32, block_size=8,
+                n_blocks=n_blocks, speculate_k=k,
+            ),
+        )
+        a = eng.submit(BASE_TENANT, np.arange(2, 10, dtype=np.int32), 16)
+        b = eng.submit(BASE_TENANT, np.arange(12, 20, dtype=np.int32), 16)
+        done = eng.run()
+        assert eng.allocator.n_free == eng.allocator.capacity
+        return eng, done[a.uid], done[b.uid]
+
+    _, a_plain, b_plain = run(k=0, n_blocks=1 + 8)  # uncontended reference
+    eng, a, b = run(k=2, n_blocks=1 + 5)  # collide crossing position 16
+    assert eng.preemptions >= 1 and b.preemptions >= 1
+    assert a.tokens == a_plain.tokens and b.tokens == b_plain.tokens
+
+
+def test_speculative_truncated_lambda_drafter_matches_plain():
+    """``draft_lam_rank=r`` drafts with each adapter's λ truncated to its r
+    largest-magnitude coefficients — a cheaper-but-closer drafter; exact
+    acceptance still guarantees plain-engine tokens."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    kw = dict(layout="paged", block_size=8)
+    _, plain_done = _run_engine(cfg, SPEC_SPECS, **kw)
+    eng, spec_done = _run_engine(
+        cfg, SPEC_SPECS, speculate_k=3, draft_lam_rank=2, **kw
+    )
+    _assert_same_outputs(plain_done, spec_done)
+    assert eng.acceptance_rate > 0.0
+
+
+def test_speculative_telemetry_counts_exactly_once():
+    """Every speculative step records its acceptance exactly once: the
+    histogram count equals the engine's step counter and the three token
+    counters reconcile with the engine's own bookkeeping."""
+    cfg = get_reduced("smollm-135m").replace(dtype="float32")
+    eng, _ = _run_engine(
+        cfg, SPEC_SPECS, layout="paged", block_size=8, speculate_k=3
+    )
+    snap = eng.metrics()
+    assert snap["serve_spec_acceptance"]["series"][0]["count"] == eng.spec_steps
+    counters = {
+        name: snap[name]["series"][0]["value"]
+        for name in (
+            "serve_spec_drafted_total",
+            "serve_spec_accepted_total",
+            "serve_spec_rolled_back_total",
+        )
+    }
+    assert counters["serve_spec_drafted_total"] == eng.drafted_tokens
+    assert counters["serve_spec_accepted_total"] == eng.accepted_drafts
+    assert counters["serve_spec_rolled_back_total"] == (
+        eng.drafted_tokens - eng.accepted_drafts
+    )
+    # draft/verify step spans landed in the trace
+    spans = {
+        e["name"]
+        for e in eng.telemetry.tracer.to_chrome()["traceEvents"]
+        if e["ph"] == "X"
+    }
+    assert {"draft", "verify"} <= spans
+
+
+def test_speculation_rejected_for_recurrent_families():
+    """Families carrying recurrent decode state (ssm scan, hybrid Mamba)
+    cannot rewind rejected draft positions — both the config check and
+    engine construction refuse ``speculate_k``."""
+    cfg = EngineConfig(n_lanes=1, n_slots=2, max_len=16, speculate_k=2)
+    for family in SPECULATIVE_FAMILIES:
+        cfg.validate_speculation(family)  # no raise
+    for family in ("ssm", "hybrid"):
+        with pytest.raises(ValueError, match="cannot rewind"):
+            cfg.validate_speculation(family)
+    with pytest.raises(ValueError, match="cannot rewind"):
+        MultiTenantEngine(
+            get_reduced("xlstm_125m").replace(dtype="float32"),
+            EngineConfig(n_lanes=1, n_slots=2, max_len=16, speculate_k=2),
+        )
