@@ -12,9 +12,11 @@ differ by ~600 λ scalars, their system preamble dominates KV HBM), the
 chunked-prefill tail-latency split (resident lanes' inter-token gap with a
 long prompt admitted monolithically vs streamed through the per-step chunk
 budget), the speculative-decoding A/B (per-lane token latency at draft
-depth k ∈ {0, 2, 4} through the free slot-0 base drafter), and the
-recurrent-family decode paths (xlstm-only and jamba hybrid
-batches) that join the shared loop through the LaneState protocol.
+depth k ∈ {0, 2, 4} through the free slot-0 base drafter), the
+quantized-base A/B (the paged engine with every adapted projection
+streamed as int8 vs the same engine in bf16 — the frozen-W bandwidth
+lever), and the recurrent-family decode paths (xlstm-only and jamba
+hybrid batches) that join the shared loop through the LaneState protocol.
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ import numpy as np
 
 from benchmarks.common import SCALE, emit
 from repro.configs import get_config, get_reduced
+from repro.core.quantize import quantize_weight, resident_base_bytes
 from repro.kernels import ref
 from repro.serving import (
     BASE_TENANT,
@@ -457,6 +460,87 @@ def bench_speculative():
     )
 
 
+def bench_quantized():
+    """Quantized-base A/B: one paged engine per ``base_dtype`` on identical
+    weights, prompts and λ, drained to completion.
+
+    The default reduced config adapts (and therefore quantizes) only
+    wq/wv — a sliver of the per-step FLOPs — so this bench widens the
+    adapter to every projection of every layer and fattens d_model/d_ff
+    until the base matmuls dominate the step: the regime the knob targets
+    (the frozen base is the bandwidth budget; λ/B/A are noise).  bf16 is
+    the slow dtype on this host's XLA CPU backend (emulated arithmetic)
+    just as it is the bandwidth-bound dtype on TPU HBM — the int8 path
+    contracts in fp32 with a per-channel epilogue multiply either way, so
+    the A/B direction is meaningful at smoke scale and the int8 < bf16
+    assert is the tentpole's pitch under the trajectory gate.
+
+    Like ``bench_speculative`` this times warmed min-of-3 drains: both
+    engines share one params tree (the int8 engine quantizes its copy at
+    construction), so the datum is the decode path, not init or compile."""
+    if SCALE != "paper":
+        dm, dff, heads, kv = 512, 1536, 8, 4
+        lanes, gen, prompt_len, max_len = 4, 16, 8, 64
+    else:
+        dm, dff, heads, kv = 768, 2304, 8, 4
+        lanes, gen, prompt_len, max_len = 8, 32, 16, 128
+    base = get_reduced("smollm-135m")
+    cfg = base.replace(
+        d_model=dm, n_heads=heads, n_kv_heads=kv, d_ff=dff, dtype="bfloat16",
+        adapter=base.adapter.replace(
+            targets=("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"),
+            layers="all",
+        ),
+    )
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=prompt_len).astype(np.int32)
+        for _ in range(lanes)
+    ]
+    ck = dict(layout="paged", n_lanes=lanes, n_slots=4, max_len=max_len)
+    wall = {}
+    params = None
+    for mode in ("bf16", "int8"):
+        eng = MultiTenantEngine(
+            cfg, EngineConfig(base_dtype=mode, **ck), params=params
+        )
+        params = eng.params if params is None else params  # share the QR init
+        eng.add_tenant("t1", random_lambda(jax.random.PRNGKey(1), eng.params, 0.1))
+        for p in prompts:
+            eng.submit("t1", p, gen)
+        eng.run()  # warm drain: compiles prefill + decode
+        best = float("inf")
+        for _ in range(3):
+            for p in prompts:
+                eng.submit("t1", p, gen)
+            t0 = time.time()
+            eng.run()
+            best = min(best, time.time() - t0)
+        tokens = lanes * gen
+        wall[mode] = best
+        extra = ""
+        if mode == "int8":
+            qb, fb = resident_base_bytes(eng.params)
+            extra = f";base_bytes={qb};bf16_equiv_bytes={fb}"
+        emit(
+            f"serve_multitenant:kv_cache:paged_{mode}",
+            best / tokens * 1e6,
+            f"tok_s={tokens/best:.0f};lanes={lanes};d_model={dm};"
+            f"adapted=all{extra}",
+        )
+    assert wall["int8"] < wall["bf16"], (
+        f"int8 paged drain {wall['int8']:.3f}s not below bf16 "
+        f"{wall['bf16']:.3f}s — the quantized base no longer pays for its "
+        "dequant epilogue"
+    )
+    emit(
+        "serve_multitenant:kv_cache:paged_quant_saving",
+        0.0,
+        f"bf16_s={wall['bf16']:.3f};int8_s={wall['int8']:.3f};"
+        f"speedup={wall['bf16']/wall['int8']:.2f}x",
+    )
+
+
 def bench_telemetry_overhead():
     """Telemetry A/B on the ``tenants=4`` throughput workload: the
     default-on metrics + span tracing must stay invisible at serving
@@ -527,10 +611,19 @@ def bench_decode_phases():
         lambda: ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths)
     )
     bgmv = jax.jit(lambda: ref.qrlora_bgmv_ref(x, W, Bm, A, tab, seg))
+    # the same BGMV with W streamed as int8 + per-channel epilogue dequant
+    qW = quantize_weight(W, "int8")
+    wq, ws = qW["q"], qW["scale"]
+    dequant = jax.jit(
+        lambda: ref.qrlora_bgmv_quant_ref(x, wq, ws, Bm, A, tab, seg)
+    )
 
     times = {}
     n = 10
-    for name, f in (("kv_gather", gather), ("attend", attend), ("bgmv", bgmv)):
+    for name, f in (
+        ("kv_gather", gather), ("attend", attend), ("bgmv", bgmv),
+        ("dequant", dequant),
+    ):
         jax.block_until_ready(f())  # compile outside the timer
         t0 = time.time()
         for _ in range(n):
@@ -544,6 +637,10 @@ def bench_decode_phases():
                 f"heads={H}/{KV};dh={dh}"
             ),
             "bgmv": f"rows={lanes};r={r};slots={n_slots}",
+            "dequant": (
+                f"vs_bgmv={us/max(times['bgmv'],1e-9):.2f}x;int8_base;"
+                f"rows={lanes};r={r}"
+            ),
         }[name]
         emit(f"serve_multitenant:phase:{name}", us, detail)
 
@@ -559,6 +656,7 @@ def main():
     bench_decode_phases()
     bench_paged_vs_dense()
     bench_prefix_sharing()
+    bench_quantized()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,13 @@ from typing import Tuple
 
 ADAPTER_MODES = ("none", "ft", "lora", "svd_lora", "qr_lora")
 
+# Frozen-base weight dtypes ("bf16" = the model's native dtype, unquantized;
+# int8/fp8 = per-output-channel symmetric quantization of every adapted base
+# projection at install time — see core/quantize.py).  Defined here, at the
+# bottom of the import stack, so configs, core, and serving all share one
+# source of truth.
+BASE_DTYPES = ("bf16", "int8", "fp8")
+
 
 @dataclass(frozen=True)
 class AdapterConfig:
@@ -132,6 +139,11 @@ class ModelConfig:
     # halves S² HBM traffic — the Pallas flash kernel removes it entirely
     # on real TPU).
     attn_scores_dtype: str = "float32"
+    # Frozen-base weight dtype: "bf16" keeps W in the model dtype; "int8"/
+    # "fp8" replace every adapted base projection with a per-output-channel
+    # symmetric {q, scale} pair at install time and dequantize in the kernel
+    # epilogue (λ, B, A stay full precision — core/quantize.py).
+    base_dtype: str = "bf16"
 
     adapter: AdapterConfig = field(default_factory=AdapterConfig)
 
@@ -143,6 +155,9 @@ class ModelConfig:
             f"n_kv_heads={self.n_kv_heads}"
         )
         assert self.adapter.mode in ADAPTER_MODES
+        assert self.base_dtype in BASE_DTYPES, (
+            f"{self.name}: base_dtype={self.base_dtype!r} not in {BASE_DTYPES}"
+        )
 
     # -- derived -----------------------------------------------------------
     @property

@@ -26,8 +26,25 @@ import jax.numpy as jnp
 from repro.configs.base import AdapterConfig, ModelConfig
 from repro.core.lora import lora_init_stacked, svd_lora_init_stacked
 from repro.core.qr_lora import qr_lora_init_stacked
+from repro.core.quantize import dequantize_weight, is_quantized
 
 Pytree = Any
+
+
+def _quant_base_matmul(x: jax.Array, W: Dict[str, jax.Array]) -> jax.Array:
+    """XLA dequant-in-epilogue base matmul: ``(x·q)·w_scale``.
+
+    The per-output-channel scale multiplies *after* the contraction — the
+    same expression tree as the fused kernels and ``kernels/ref.py``
+    oracles, and (measured) faster than a bf16 matmul on CPU: the int8
+    operand halves the streamed bytes and the product runs in fp32.
+    """
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        W["q"].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return (acc * W["scale"].astype(jnp.float32)).astype(x.dtype)
 
 
 def adapter_scale(cfg: AdapterConfig) -> float:
@@ -69,17 +86,19 @@ def adapted_matmul(
     base-model tenant).  ``kernel="pallas"`` uses the BGMV kernel
     (``repro/kernels/qrlora_bgmv.py``); "xla" gathers λ rows with ``take``.
     """
+    quant = is_quantized(W)
     if adp is None:
-        return x @ W
+        return _quant_base_matmul(x, W) if quant else x @ W
     seg = adp.get("seg")
     if seg is not None:
-        from repro.sharding.rules import get_mesh, lam_slot_axis
+        from repro.sharding.rules import get_mesh, lam_slot_axis, qr_rank_axis
 
         lam_table = adp["lam"]  # (n_slots, r)
         mesh = get_mesh()
         # "auto": the BGMV kernel is the fast path on an unsharded real TPU;
         # the take gather lowers everywhere else (CPU engine tests, and any
-        # installed mesh — pallas_call does not lower under GSPMD sharding).
+        # installed mesh — pallas_call does not lower under GSPMD sharding,
+        # though the *fused sharded* path below wraps it in shard_map).
         if kernel == "pallas" or (
             kernel == "auto"
             and jax.default_backend() == "tpu"
@@ -87,11 +106,36 @@ def adapted_matmul(
         ):
             from repro.kernels import ops as _kops
 
+            if quant:
+                return _kops.qrlora_bgmv_quant(
+                    x, W["q"], W["scale"], adp["B"], adp["A"], lam_table,
+                    seg, scale=scale,
+                )
             return _kops.qrlora_bgmv(
                 x, W, adp["B"], adp["A"], lam_table, seg, scale=scale
             )
+        B_, A_ = adp["B"], adp["A"]
+        ba_axis = qr_rank_axis()
+        if mesh is not None and ba_axis is not None:
+            # B/A sharded at rest over their rank dim (serving shard_ba):
+            # all_gather is an exact concatenation of the shards, so the
+            # downstream math sees bitwise the replicated factors — the
+            # sharding saves HBM at rest, not the matmul numerics.
+            from repro.kernels.qrlora_bgmv import ba_gather_sharded
+
+            B_, A_ = ba_gather_sharded(B_, A_, mesh=mesh, axis=ba_axis)
         lam_axis = lam_slot_axis()
         if mesh is not None and lam_axis is not None:
+            if kernel != "xla" and jax.default_backend() == "tpu":
+                # ONE dispatch on the sharded TPU path: shard-local λ gather
+                # + psum + the rows BGMV kernel in a single shard_map body
+                from repro.kernels import ops as _kops
+
+                return _kops.qrlora_bgmv_sharded(
+                    x, W["q"] if quant else W, B_, A_, lam_table, seg,
+                    mesh=mesh, axis=lam_axis, scale=scale,
+                    w_scale=W["scale"] if quant else None,
+                )
             # λ table sharded over its slot axis (serving/lam_store with
             # shard_lam): gather rows from local shards only — bit-identical
             # to the replicated take, each device holds n_slots/axis_size rows
@@ -105,15 +149,21 @@ def adapted_matmul(
         lam_rows = lam_rows.reshape(
             seg.shape[0], *([1] * (x.ndim - 2)), lam_table.shape[-1]
         ).astype(x.dtype)
-        low = ((x @ adp["B"]) * lam_rows) @ adp["A"]
-        return x @ W + low * scale
+        low = ((x @ B_) * lam_rows) @ A_
+        y = _quant_base_matmul(x, W) if quant else x @ W
+        return y + low * scale
     if kernel == "pallas":
         from repro.kernels import ops as _kops
 
+        if quant:
+            return _kops.qrlora_matmul_quant(
+                x, W["q"], W["scale"], adp["B"], adp["A"], adp["lam"],
+                scale=scale,
+            )
         return _kops.qrlora_matmul(
             x, W, adp["B"], adp["A"], adp["lam"], scale=scale
         )
-    y = x @ W
+    y = _quant_base_matmul(x, W) if quant else x @ W
     lam = adp["lam"].astype(x.dtype)
     low = ((x @ adp["B"]) * lam) @ adp["A"]
     return y + low * scale
@@ -122,7 +172,17 @@ def adapted_matmul(
 def merge_adapter(
     W: jax.Array, adp: Optional[Dict[str, jax.Array]], scale: float = 1.0
 ) -> jax.Array:
-    """Fold the adapter into the weight (serving fast-path)."""
+    """Fold the adapter into the weight (serving fast-path).
+
+    A quantized base is dequantized first, so a merged reference built
+    from an int8 engine's params *shares* its quantization — which is what
+    keeps serve_multi's merged-weight verification tolerance meaningful
+    for quantized engines.
+    """
+    if is_quantized(W):
+        W = dequantize_weight(
+            W, adp["B"].dtype if adp is not None else jnp.float32
+        )
     if adp is None:
         return W
     lam = adp["lam"].astype(W.dtype)

@@ -17,8 +17,15 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.paged_attention import paged_decode_attention_kernel
-from repro.kernels.qrlora_bgmv import qrlora_bgmv_kernel
-from repro.kernels.qrlora_matmul import qrlora_matmul_kernel
+from repro.kernels.qrlora_bgmv import (
+    qrlora_bgmv_fused_sharded,
+    qrlora_bgmv_kernel,
+    qrlora_bgmv_quant_kernel,
+)
+from repro.kernels.qrlora_matmul import (
+    qrlora_matmul_kernel,
+    qrlora_matmul_quant_kernel,
+)
 
 
 def _on_tpu() -> bool:
@@ -120,6 +127,92 @@ def qrlora_bgmv(x, W, B, A, lam_table, seg, scale: float = 1.0):
     y = qrlora_bgmv_kernel(
         x2, W, B, A, lam_table, seg2[:, None],
         scale=scale, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu(),
+    )[:M0]
+    return y.reshape(*orig_shape[:-1], N)
+
+
+# ---------------------------------------------------------------------------
+# quantized-base variants (int8 / fp8-e4m3 W with per-output-channel scales)
+# ---------------------------------------------------------------------------
+#
+# On TPU these run the fused dequant-in-epilogue kernels (W streams at 1
+# byte/element, the bf16 copy is never materialized in HBM).  Off-TPU they
+# run the XLA oracle instead of interpret mode — same policy as
+# ``paged_decode_attention``: the oracle shares the kernels' exact
+# epilogue expression tree, and interpret mode is the wrong thing to pay
+# for on the CPU engine path.
+
+
+def qrlora_matmul_quant(x, q, w_scale, B, A, lam, scale: float = 1.0):
+    """Quantized-base ``y = (x·q)·w_scale + ((x·B)·λ)·A·scale``.
+
+    ``q (K, N)`` int8/fp8-e4m3, ``w_scale (N,)`` fp32.  Inference-only
+    (the quantized base sits behind frozen-W serving; training keeps bf16).
+    """
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    K = x2.shape[1]
+    N = q.shape[1]
+    if not _on_tpu():
+        y = ref.qrlora_matmul_quant_ref(x2, q, w_scale, B, A, lam, scale)
+        return y.reshape(*orig_shape[:-1], N)
+    x2, M0, bm, bn, bk = _matmul_blocking(x2, N, K)
+    y = qrlora_matmul_quant_kernel(
+        x2, q, w_scale, B, A, lam, scale=scale, bm=bm, bn=bn, bk=bk,
+    )[:M0]
+    return y.reshape(*orig_shape[:-1], N)
+
+
+def _seg_rows(seg, x, M):
+    seg = seg.astype(jnp.int32)
+    if x.ndim >= 3 and seg.shape[0] != M:
+        # per-sequence ids → per-row ids (tokens inherit the sequence slot)
+        seg = jnp.repeat(seg, M // seg.shape[0])
+    return seg
+
+
+def qrlora_bgmv_quant(x, q, w_scale, B, A, lam_table, seg, scale: float = 1.0):
+    """Quantized-base batched multi-λ matmul (see :func:`qrlora_bgmv`)."""
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = q.shape[1]
+    seg = _seg_rows(seg, x, M)
+    if not _on_tpu():
+        y = ref.qrlora_bgmv_quant_ref(x2, q, w_scale, B, A, lam_table, seg, scale)
+        return y.reshape(*orig_shape[:-1], N)
+    x2, M0, bm, bn, bk = _matmul_blocking(x2, N, K)
+    seg2, _ = _pad_to(seg, bm, 0)  # pad rows land in slot 0 (λ ≡ 0)
+    y = qrlora_bgmv_quant_kernel(
+        x2, q, w_scale, B, A, lam_table, seg2[:, None],
+        scale=scale, bm=bm, bn=bn, bk=bk,
+    )[:M0]
+    return y.reshape(*orig_shape[:-1], N)
+
+
+def qrlora_bgmv_sharded(
+    x, W, B, A, lam_table, seg, *, mesh, axis, scale: float = 1.0,
+    w_scale=None,
+):
+    """Sharded-λ BGMV in one dispatch: local λ gather + psum + the rows
+    kernel inside a single ``shard_map`` (``qrlora_bgmv_fused_sharded``).
+    ``lam_table`` is sharded over ``axis``; everything else replicated.
+    ``W`` may be int8/fp8 with ``w_scale`` — the fused kernel dequantizes
+    in the epilogue.  Off-TPU this runs the same fused path in interpret
+    mode (unit-test surface; the CPU *engine* keeps the two-step XLA path
+    in ``adapter_api`` for speed).
+    """
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = W.shape[1]
+    seg = _seg_rows(seg, x, M)
+    x2, M0, bm, bn, bk = _matmul_blocking(x2, N, K)
+    seg2, _ = _pad_to(seg, bm, 0)  # pad rows land in slot 0 (λ ≡ 0)
+    y = qrlora_bgmv_fused_sharded(
+        x2, W, B, A, lam_table, seg2,
+        mesh=mesh, axis=axis, scale=scale, w_scale=w_scale,
+        bm=bm, bn=bn, bk=bk, interpret=not _on_tpu(),
     )[:M0]
     return y.reshape(*orig_shape[:-1], N)
 

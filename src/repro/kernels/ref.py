@@ -31,6 +31,53 @@ def qrlora_bgmv_ref(x, W, B, A, lam_table, seg, scale: float = 1.0):
     return (y + low * scale).astype(x.dtype)
 
 
+def qrlora_matmul_quant_ref(x, q, w_scale, B, A, lam, scale: float = 1.0):
+    """Quantized-base oracle: ``y = (x·q)·w_scale + ((x·B)·λ)·A·scale``.
+
+    q (K,N) int8/fp8; w_scale (N,) fp32 per-output-channel.  The dequant
+    multiply is applied *after* the contraction — the same expression tree
+    as the fused kernel's accumulator epilogue, so single-k-block shapes
+    are bit-identical between the two.  The optimization barrier pins the
+    epilogue rounding to multiply-then-add: without it XLA contracts
+    ``acc·w_scale + low`` into an FMA (one rounding) while the kernel
+    rounds the dequant product first, a 1-ulp split that would break the
+    bit-identity contract.
+    """
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        q.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y = jax.lax.optimization_barrier(acc * w_scale.astype(jnp.float32)[None, :])
+    low = jnp.dot(
+        jnp.dot(x, B, preferred_element_type=jnp.float32) * lam.astype(jnp.float32),
+        A.astype(jnp.float32),
+    )
+    return (y + low * scale).astype(x.dtype)
+
+
+def qrlora_bgmv_quant_ref(x, q, w_scale, B, A, lam_table, seg, scale: float = 1.0):
+    """Quantized-base batched multi-λ oracle (see :func:`qrlora_bgmv_ref`).
+
+    ``y_m = (x_m·q)·w_scale + ((x_m·B) * Λ[seg_m])·A·scale`` with the
+    per-channel dequant in the epilogue, matching the fused kernel (the
+    barrier blocks the FMA contraction — see
+    :func:`qrlora_matmul_quant_ref`).
+    """
+    lam_rows = jnp.take(lam_table, seg, axis=0).astype(jnp.float32)  # (M, r)
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        q.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y = jax.lax.optimization_barrier(acc * w_scale.astype(jnp.float32)[None, :])
+    low = jnp.dot(
+        jnp.dot(x, B, preferred_element_type=jnp.float32) * lam_rows,
+        A.astype(jnp.float32),
+    )
+    return (y + low * scale).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """q (B,Sq,H,dh); k,v (B,Sk,KV,dh) — GQA broadcast, fp32 softmax."""
     B, Sq, H, dh = q.shape

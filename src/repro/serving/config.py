@@ -41,6 +41,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.configs.base import BASE_DTYPES
+from repro.core.quantize import FP8_SUPPORTED
 from repro.models.transformer import PAGED_FAMILIES
 
 LAYOUTS = ("auto", "paged", "oracle_dense")
@@ -98,6 +100,19 @@ class EngineConfig:
     #: acceptance rate on strongly-adapted tenants.  ``None`` = λ ≡ 0 base
     #: drafter.  Needs ``speculate_k >= 1``.
     draft_lam_rank: Optional[int] = None
+    #: Frozen-base weight dtype: "bf16" leaves the model's native weights
+    #: alone; "int8"/"fp8" quantize every adapted base projection
+    #: per-output-channel at engine construction (``core/quantize.py``) and
+    #: dequantize in the kernel epilogue — λ, B, A stay full precision.
+    #: "fp8" needs jax.numpy.float8_e4m3fn (validated here, before any
+    #: device memory is touched).
+    base_dtype: str = "bf16"
+    #: Shard the shared QR factors B/A over their rank dim along the mesh
+    #: model axis (the ``qr_rank`` logical axis) — divides their at-rest
+    #: HBM by the axis size for >1-host bases; decode stays bit-identical
+    #: to replicated (exact all_gather reassembly, see
+    #: ``kernels/qrlora_bgmv.ba_gather_sharded``).
+    shard_ba: bool = False
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -152,6 +167,15 @@ class EngineConfig:
                     "draft_lam_rank configures the speculative drafter — it "
                     "needs speculate_k >= 1"
                 )
+        if self.base_dtype not in BASE_DTYPES:
+            raise ValueError(
+                f"base_dtype={self.base_dtype!r} must be one of {BASE_DTYPES}"
+            )
+        if self.base_dtype == "fp8" and not FP8_SUPPORTED:
+            raise ValueError(
+                "base_dtype='fp8' needs jax.numpy.float8_e4m3fn, which this "
+                "jax build does not provide — use base_dtype='int8'"
+            )
         if self.layout == "oracle_dense":
             if self.share_prefix:
                 raise ValueError(

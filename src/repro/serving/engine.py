@@ -116,6 +116,7 @@ import numpy as np
 from repro.compat import make_mesh
 from repro.configs.base import ModelConfig
 from repro.core import adapter_api
+from repro.core.quantize import quantize_base_params
 from repro.models import build_model
 from repro.obs import Telemetry
 from repro.models.lane_state import extract_lane, restore_lane
@@ -123,7 +124,7 @@ from repro.serving.config import EngineConfig
 from repro.serving.lam_store import LamStore, extract_lambda
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
-from repro.sharding.rules import axis_rules
+from repro.sharding.rules import axis_rules, param_sharding_rules
 
 Pytree = Any
 
@@ -240,6 +241,14 @@ class MultiTenantEngine:
         self.params = (
             params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         )
+        # Quantized frozen base: the engine knob wins over the model config
+        # (serving decides the deployment dtype); "bf16" is a no-op, and
+        # re-quantizing already-quantized params is one too, so passing a
+        # pre-quantized tree is fine.
+        self.base_dtype = (
+            config.base_dtype if config.base_dtype != "bf16" else cfg.base_dtype
+        )
+        self.params = quantize_base_params(self.params, self.base_dtype)
         # λ-store tiers + sharding: a 1-D "model" mesh over the local
         # devices carries the slot axis of the packed λ tables when
         # shard_lam is on; the minimal rule table maps ONLY the λ-table
@@ -258,9 +267,21 @@ class MultiTenantEngine:
         self._defer_cold = tel.defers.labels(cause="cold_promote")
         self._mesh = None
         self._mesh_rules = None
-        if shard_lam:
+        if shard_lam or config.shard_ba:
             self._mesh = make_mesh((len(jax.devices()),), ("model",))
-            self._mesh_rules = {"lam_slots": "model"}
+            self._mesh_rules = {}
+            if shard_lam:
+                self._mesh_rules["lam_slots"] = "model"
+            if config.shard_ba:
+                self._mesh_rules["qr_rank"] = "model"
+                # physically shard the B/A leaves over their rank dim; every
+                # other leaf keeps a replicated placement (the rule table maps
+                # only the opted-in logical axes, so param_sharding_rules
+                # yields fully-replicated specs for the rest of the tree)
+                with self._rules_ctx():
+                    self.params = jax.device_put(
+                        self.params, param_sharding_rules(self.params)
+                    )
         with self._rules_ctx():
             self.lam_store = LamStore.from_params(
                 self.params, n_slots=n_slots, cold_slots=cold_slots,

@@ -20,6 +20,11 @@ Baseline rule table (see DESIGN.md §4):
     lam_slots → None            # serving: packed λ-table slot axis (the
                                 # multi-tenant engine maps it to "model"
                                 # under shard_lam=True; see serving/lam_store)
+    qr_rank   → None            # serving: rank dim of the shared QR factors
+                                # B (..., K, r) / A (..., r, N) — the engine
+                                # maps it to "model" under shard_ba=True and
+                                # reassembles with an exact all_gather
+                                # (kernels/qrlora_bgmv.ba_gather_sharded)
 """
 from __future__ import annotations
 
@@ -61,6 +66,7 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False, dp_only: bool = False, repl
             "kv_seq": None,
             "fsdp": None,
             "lam_slots": None,
+            "qr_rank": None,
             "dp_axes": all_dp,
             "model_axis": None,
         }
@@ -73,6 +79,7 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False, dp_only: bool = False, repl
         "kv_seq": None,
         "fsdp": (dp if fsdp else None),
         "lam_slots": None,  # λ-table sharding is a serving-side opt-in
+        "qr_rank": None,  # B/A rank-dim sharding is a serving-side opt-in
         "dp_axes": dp,  # consumed by shard_map blocks (MoE)
         "model_axis": model,
     }
@@ -115,6 +122,17 @@ def lam_slot_axis() -> Optional[Any]:
     if get_mesh() is None:
         return None
     return _rules().get("lam_slots")
+
+
+def qr_rank_axis() -> Optional[Any]:
+    """Mesh axis the shared QR factors' *rank* dim is sharded over (the
+    ``qr_rank`` logical axis), or None when B/A are replicated.
+    ``adapted_matmul`` consults this to reassemble the factors with an
+    exact all_gather before the contraction
+    (``kernels.qrlora_bgmv.ba_gather_sharded``)."""
+    if get_mesh() is None:
+        return None
+    return _rules().get("qr_rank")
 
 
 def shard(x: jax.Array, *names) -> jax.Array:
@@ -187,7 +205,20 @@ def _spec_for_path(path: Sequence[str], shape: Tuple[int, ...]) -> P:
     rules = _rules()
     name = path[-1]
     if "adapters" in path:
-        # adapter factors are small — replicate (see DESIGN.md §4)
+        # adapter factors replicate by default (small — DESIGN.md §4), but
+        # the serving engine can opt B/A onto their rank dim ("qr_rank",
+        # shard_ba): B (..., K, r) shards dim -1, A (..., r, N) dim -2.
+        ax = rules.get("qr_rank") if name in ("A", "B") else None
+        mesh = get_mesh()
+        if ax is not None and mesh is not None and len(shape) >= 2:
+            rank_dim = len(shape) - 1 if name == "B" else len(shape) - 2
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if shape[rank_dim] % size == 0:
+                spec = [None] * len(shape)
+                spec[rank_dim] = ax
+                return P(*spec)
         return P(*([None] * len(shape)))
     logical = _PARAM_LOGICAL.get(name)
     if logical is None:

@@ -45,12 +45,29 @@ def test_config_defaults_are_auto_layout():
         dict(draft_lam_rank=4),  # a drafter needs speculate_k >= 1
         dict(speculate_k=2, draft_lam_rank=0),
         dict(layout="paged", speculate_k=2, prefill_chunk=16),  # verify vs chunk
+        dict(base_dtype="int4"),  # not a base dtype
+        dict(base_dtype="float16"),
     ],
     ids=lambda kw: ",".join(f"{k}={v}" for k, v in kw.items()),
 )
 def test_config_rejects_incoherent_combinations(kw):
     with pytest.raises(ValueError):
         EngineConfig(**kw)
+
+
+def test_config_base_dtype_validation(monkeypatch):
+    # quantized-base knobs construct when supported…
+    assert EngineConfig(base_dtype="int8").base_dtype == "int8"
+    assert EngineConfig(base_dtype="bf16").base_dtype == "bf16"
+    import repro.serving.config as config_mod
+
+    if config_mod.FP8_SUPPORTED:
+        assert EngineConfig(base_dtype="fp8").base_dtype == "fp8"
+    # …and fp8 is rejected at construction on a jax without float8_e4m3fn
+    # (before any device memory is touched), with a pointer to int8
+    monkeypatch.setattr(config_mod, "FP8_SUPPORTED", False)
+    with pytest.raises(ValueError, match="int8"):
+        EngineConfig(base_dtype="fp8")
 
 
 def test_config_layout_resolution_gates_and_quantum():
