@@ -20,6 +20,7 @@ MODULES = [
     ("kernel", "benchmarks.kernel_bench"),
     ("train_throughput", "benchmarks.train_throughput"),
     ("serve_multitenant", "benchmarks.serve_multitenant"),
+    ("multi_replica", "benchmarks.multi_replica"),
 ]
 
 

@@ -295,11 +295,14 @@ def bench_prefix_sharing():
     free list (the HBM high-water mark the pool must be sized for)."""
     arch = "smollm-135m"
     cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
-    lanes, bs, P, gen, max_len = (4, 8, 32, 8, 64) if SCALE != "paper" else (8, 16, 128, 32, 256)
+    # P is sized so the re-prefill a cache hit avoids dwarfs the host-side
+    # sharing bookkeeping (gate hashing, CoW guards, refcounts) — at tiny
+    # prompt lengths the two are comparable and the A/B is a coin flip
+    lanes, bs, P, gen, max_len = (4, 8, 64, 8, 96) if SCALE != "paper" else (8, 16, 128, 32, 256)
     rng = np.random.default_rng(0)
     prompt = rng.integers(2, cfg.vocab_size, size=P).astype(np.int32)
 
-    peaks = {}
+    engines = {}
     for mode, share in (("unshared", False), ("shared", True)):
         eng = MultiTenantEngine(
             cfg,
@@ -312,19 +315,41 @@ def bench_prefix_sharing():
         for i in range(lanes):
             eng.add_tenant(f"fam{i}", fam)  # one λ checkpoint, many tenants
             eng.submit(f"fam{i}", prompt, gen)
-        t0 = time.time()
-        eng.run()
-        dt = time.time() - t0
-        peak = eng.allocator.peak_in_use
-        peaks[mode] = peak
+        eng.run()  # warm drain: compiles prefill + decode, seeds the cache
+        engines[mode] = eng
+    # min-of-4 warmed drains, reps interleaved across the modes: both time
+    # the same steady state (unshared re-prefills every drain, shared hits
+    # its cache) and machine drift lands on both equally, instead of
+    # whichever mode ran second paying the slower half of the box — the
+    # skews behind the old shared>unshared regression and its flaky
+    # reappearances
+    per_step = {m: float("inf") for m in engines}
+    for _ in range(4):
+        for mode, eng in engines.items():
+            for i in range(lanes):
+                eng.submit(f"fam{i}", prompt, gen)
+            s0 = eng.steps
+            t0 = time.time()
+            eng.run()
+            per_step[mode] = min(
+                per_step[mode], (time.time() - t0) / max(eng.steps - s0, 1))
+    peaks = {}
+    for mode, eng in engines.items():
+        per_step[mode] *= 1e6
+        peaks[mode] = eng.allocator.peak_in_use
         hits = eng.prefix_cache.hits if eng.prefix_cache is not None else 0
         emit(
             f"serve_multitenant:prefix_share:{mode}",
-            dt / max(eng.steps, 1) * 1e6,
-            f"peak_blocks={peak};prefix_hits={hits};lanes={lanes};"
+            per_step[mode],
+            f"peak_blocks={peaks[mode]};prefix_hits={hits};lanes={lanes};"
             f"prompt={P};block_size={bs};"
             f"block_bytes={eng.kv_cache_bytes() // eng.allocator.n_blocks}",
         )
+    assert per_step["shared"] <= 1.05 * per_step["unshared"], (
+        f"shared-prefix step time {per_step['shared']:.0f}us exceeds "
+        f"1.05x unshared {per_step['unshared']:.0f}us — sharing must not "
+        "cost on the decode path"
+    )
     prefix_blocks = P // bs
     tail_blocks = -(-((P % bs) + gen) // bs)
     want = prefix_blocks + lanes * tail_blocks
@@ -349,8 +374,10 @@ def bench_chunked_prefill():
     prompts admit.  Short requests decode first; long prompts are submitted
     mid-stream, so a monolithic admission prefill stalls every resident
     lane for the whole prompt, while the chunked engine amortizes it at
-    ``prefill_chunk`` tokens per step.  The gated value is mean step time;
-    the TBT datum (resident lanes' worst token gap) is the knob's point."""
+    ``prefill_chunk`` tokens per step.  The gated value is that worst
+    admission stall — the token gap resident lanes eat — with mean step
+    time held to parity in the detail (same total prefill FLOPs, so the
+    knob buys latency, not throughput)."""
     arch = "smollm-135m"
     cfg = (get_config if SCALE == "paper" else get_reduced)(arch)
     if SCALE != "paper":
@@ -360,6 +387,34 @@ def bench_chunked_prefill():
         lanes, bs, chunk, max_len = 4, 16, 64, 512
         short, long_p, gen_s, gen_l = 32, 384, 96, 32
     rng = np.random.default_rng(0)
+    shorts = [
+        rng.integers(2, cfg.vocab_size, size=short).astype(np.int32)
+        for _ in range(lanes)
+    ]
+    longs = [
+        rng.integers(2, cfg.vocab_size, size=long_p).astype(np.int32)
+        for _ in range(lanes)
+    ]
+
+    def _drain(eng):
+        """The A/B workload: residents decode, then long prompts land.
+        Returns the worst single-step wall time after the long prompts are
+        submitted — the stall a resident lane eats while admission runs,
+        i.e. the token gap the chunk knob exists to bound."""
+        for p in shorts:
+            eng.submit(BASE_TENANT, p, gen_s)
+        for _ in range(4):
+            eng.step()  # residents decoding before the long prompts land
+        for p in longs:
+            eng.submit(BASE_TENANT, p, gen_l)
+        stall = 0.0
+        while eng.scheduler.has_work:
+            t0 = time.time()
+            eng.step()
+            stall = max(stall, time.time() - t0)
+        return stall
+
+    engines = {}
     for mode, pc in (("off", None), ("on", chunk)):
         eng = MultiTenantEngine(
             cfg,
@@ -368,32 +423,53 @@ def bench_chunked_prefill():
                 block_size=bs, prefill_chunk=pc,
             ),
         )
-        for _ in range(lanes):
-            eng.submit(
-                BASE_TENANT,
-                rng.integers(2, cfg.vocab_size, size=short).astype(np.int32),
-                gen_s,
-            )
-        t0 = time.time()
-        for _ in range(4):
-            eng.step()  # residents decoding before the long prompts land
-        for _ in range(lanes):
-            eng.submit(
-                BASE_TENANT,
-                rng.integers(2, cfg.vocab_size, size=long_p).astype(np.int32),
-                gen_l,
-            )
-        eng.run()
-        dt = time.time() - t0
+        _drain(eng)  # warm: the chunk path compiles two extra prefill
+        # programs (mid-chunk + final-chunk) the off path never builds —
+        # timing the cold drain charged that one-off cost to "on", which
+        # was most of the old on>off regression
+        engines[mode] = eng
+    # The two configs sit within timing noise of each other on mean step
+    # time (same total prefill FLOPs, chunk dispatch overhead ≈ the
+    # monolithic bucket's padding waste), so step time is held to parity
+    # in the detail and the gate sits where the knob aims: the worst
+    # stall a resident lane eats while a long prompt admits.  Monolithic
+    # admission prefills all ``long_p`` tokens in one step; the chunked
+    # engine never stalls a step for more than ``chunk`` tokens.  Reps
+    # are interleaved (machine drift lands on both modes equally) and the
+    # min over reps is deliberate: noise only ever inflates a max, so the
+    # min-of-max converges on the structural stall from above.
+    per_step = {m: float("inf") for m in engines}
+    stall = {m: float("inf") for m in engines}
+    for _ in range(4):
+        for mode, eng in engines.items():
+            s0 = eng.steps
+            t0 = time.time()
+            worst = _drain(eng)
+            per_step[mode] = min(
+                per_step[mode], (time.time() - t0) / max(eng.steps - s0, 1))
+            stall[mode] = min(stall[mode], worst)
+    for mode, eng in engines.items():
         tel = eng.telemetry
         emit(
             f"serve_multitenant:chunked_prefill:{mode}",
-            dt / max(eng.steps, 1) * 1e6,
+            stall[mode] * 1e6,
+            f"step_us={per_step[mode] * 1e6:.1f};"
             f"tbt_p95_ms={tel.tbt.quantile(0.95):g};"
-            f"tbt_mean_ms={tel.tbt.mean:.2f};"
             f"ttft_p95_ms={tel.ttft.quantile(0.95):g};"
-            f"chunk={pc};long_prompt={long_p};lanes={lanes}",
+            f"chunk={eng.config.prefill_chunk};"
+            f"long_prompt={long_p};lanes={lanes}",
         )
+    assert stall["on"] < stall["off"], (
+        f"chunked prefill stalled resident lanes longer than monolithic "
+        f"admission ({stall['on'] * 1e3:.2f}ms vs {stall['off'] * 1e3:.2f}"
+        "ms worst step) — bounding that stall is the knob's whole point"
+    )
+    assert per_step["on"] <= 1.15 * per_step["off"], (
+        f"chunked prefill mean step time {per_step['on'] * 1e6:.0f}us "
+        f"exceeds monolithic {per_step['off'] * 1e6:.0f}us beyond noise "
+        "parity — the chunk-cursor path is paying dispatch overhead the "
+        "interleaving no longer buys back"
+    )
 
 
 def bench_speculative():

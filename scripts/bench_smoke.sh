@@ -10,7 +10,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_BENCH_SCALE="${REPRO_BENCH_SCALE:-smoke}"
 
-only="kernel,serve_multitenant"
+only="kernel,serve_multitenant,multi_replica"
 json_out="BENCH_smoke.json"
 extra=()
 while [[ $# -gt 0 ]]; do

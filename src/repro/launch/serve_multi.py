@@ -44,7 +44,9 @@ from repro.serving import (
     BASE_TENANT,
     EngineConfig,
     MultiTenantEngine,
+    Router,
     base_lambda,
+    build_replicas,
     random_lambda,
     reference_decode,
 )
@@ -94,6 +96,27 @@ def main(argv=None):
         "--watermark", type=int, default=0,
         help="free blocks admission keeps in reserve as decode-growth "
         "headroom (reduces mid-decode preemptions)",
+    )
+    ap.add_argument(
+        "--replicas", type=int, default=1, metavar="N",
+        help="serve through N engine replicas behind the adapter-locality "
+        "router (serving/router.py): requests place by consistent hash of "
+        "the tenant's λ digest with load-aware spillover, prefix-cache "
+        "entries ship between replicas on miss (1 = plain single engine)",
+    )
+    ap.add_argument(
+        "--disaggregate", action="store_true",
+        help="prefill/decode disaggregation (needs --replicas >= 2): "
+        "replica 0 runs chunked prefill only and streams committed blocks "
+        "+ first-token logits to the decode replicas, which splice them "
+        "into lanes with zero prompt recompute",
+    )
+    ap.add_argument(
+        "--cold-path", default=None, metavar="PATH",
+        help="back the λ cold tier with an mmap'd file at PATH (catalog "
+        "JSON rides alongside) so the spilled tenant catalog survives a "
+        "restart; needs --cold-slots > 0 (with --replicas N, replica i "
+        "uses PATH.ri)",
     )
     ap.add_argument(
         "--cold-slots", type=int, default=0,
@@ -209,6 +232,7 @@ def main(argv=None):
         watermark=args.watermark,
         quantum=args.quantum,
         cold_slots=args.cold_slots,
+        cold_path=args.cold_path,
         shard_lam=args.shard_lam,
         telemetry=not args.no_telemetry,
         prefill_chunk=args.prefill_chunk,
@@ -217,6 +241,13 @@ def main(argv=None):
         base_dtype=args.base_dtype,
         shard_ba=args.shard_ba,
     )
+    if args.replicas > 1 or args.disaggregate:
+        if args.disaggregate and args.replicas < 2:
+            ap.error("--disaggregate needs --replicas >= 2 (one to prefill, "
+                     "one to decode)")
+        if args.stream or args.quantum is not None:
+            ap.error("--replicas serves via the router (no --stream/--quantum)")
+        return _serve_replicated(args, cfg, econf)
     engine = MultiTenantEngine(cfg, econf)
     print(f"[serve_multi] family={cfg.family} layout={engine.layout}")
     reg = engine.lam_store
@@ -369,6 +400,85 @@ def main(argv=None):
             raise SystemExit(f"tenant {tenant} diverged from merged-weight reference")
     print(f"[serve_multi] all {len(done)} tenants match merged-weight refs "
           f"(worst |Δlogits|={worst:.2e})")
+    return done
+
+
+def _serve_replicated(args, cfg, econf):
+    """--replicas N path: one engine per replica behind the adapter-locality
+    router, same tenants/prompts/verification as the single-engine loop."""
+    import dataclasses
+
+    overrides = None
+    if econf.cold_path:
+        # one mmap file per replica — the cold catalog is per-store state
+        overrides = lambda i, c: dataclasses.replace(
+            c, cold_path=f"{c.cold_path}.r{i}")
+    replicas = build_replicas(
+        cfg, econf, args.replicas, config_overrides=overrides)
+    router = Router(replicas, disaggregate=args.disaggregate)
+    params = replicas[0].engine.params
+    roles = " ".join(f"{r.name}:{r.role}" for r in router.replicas)
+    print(f"[serve_multi] family={cfg.family} replicas={args.replicas} "
+          f"({roles}) disaggregate={args.disaggregate}")
+
+    lams = {BASE_TENANT: base_lambda(params)}
+    for i in range(1, args.tenants):
+        lams[f"tenant{i}"] = random_lambda(
+            jax.random.PRNGKey(args.seed + 1000 + i), params, args.lam_scale
+        )
+    router.add_tenants(lams)
+
+    rng = np.random.default_rng(args.seed)
+    routed = {}
+    for tenant in lams:
+        prompt = rng.integers(2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
+        r = router.submit(tenant, prompt, args.gen_len)
+        routed[r.uid] = r
+
+    t0 = time.time()
+    done = router.run()
+    dt = time.time() - t0
+    if set(done) != set(routed):
+        raise SystemExit(
+            f"router lost requests: {sorted(set(routed) - set(done))}")
+    n_tok = sum(len(r.tokens) for r in done.values())
+    print(f"[serve_multi] {n_tok} tokens in {dt*1e3:.1f} ms "
+          f"({n_tok/dt:.0f} tok/s) across {args.replicas} replicas")
+    print(f"[serve_multi] placement hit rate "
+          f"{router.placement_hit_rate():.0%}; transfers: "
+          f"{router.transport.stats()}")
+    for rep in router.replicas:
+        eng = rep.engine
+        line = (f"[serve_multi]   {rep.name} ({rep.role}): "
+                f"{eng.decoded_tokens} tokens, {eng.steps} steps")
+        if eng.paged and eng.prefix_cache is not None:
+            line += (f", prefix hits={eng.prefix_cache.hits} "
+                     f"misses={eng.prefix_cache.misses}")
+        print(line)
+    if args.metrics_out:
+        write_metrics(args.metrics_out, router.metrics())
+        print(f"[serve_multi] router metrics snapshot → {args.metrics_out}")
+    for uid in sorted(done):
+        print(f"[serve_multi] {done[uid].tenant}: {done[uid].tokens[:12]}")
+
+    if args.no_verify:
+        return done
+    tol = 1e-3 if replicas[0].engine.base_dtype == "bf16" else 5e-2
+    worst = 0.0
+    for uid, r in done.items():
+        ref_toks, ref_logits = reference_decode(
+            cfg, params, lams[r.tenant], r.prompt, args.gen_len, args.max_len
+        )
+        err = float(np.abs(np.stack(r.engine_req.logits) - ref_logits).max())
+        worst = max(worst, err)
+        ok = r.tokens == ref_toks and err < tol
+        print(f"[serve_multi] verify {r.tenant}: tokens "
+              f"{'OK' if ok else 'MISMATCH'} max|Δlogits|={err:.2e}")
+        if not ok:
+            raise SystemExit(
+                f"tenant {r.tenant} diverged from merged-weight reference")
+    print(f"[serve_multi] all {len(done)} routed tenants match merged-weight "
+          f"refs (worst |Δlogits|={worst:.2e})")
     return done
 
 

@@ -83,9 +83,18 @@ from repro.serving.lam_store import (
     AdapterRegistry,
     LamStore,
     extract_lambda,
+    lam_digest,
     random_lambda,
 )
 from repro.serving.paging import BlockAllocator, PoolExhausted, PrefixCache
+from repro.serving.replica import (
+    EngineReplica,
+    LocalTransport,
+    Transport,
+    build_replicas,
+    payload_nbytes,
+)
+from repro.serving.router import RoutedRequest, Router
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 __all__ = [
@@ -93,17 +102,25 @@ __all__ = [
     "BASE_TENANT",
     "COLD_SLOT",
     "EngineConfig",
+    "EngineReplica",
     "LamStore",
     "BlockAllocator",
     "ContinuousBatchScheduler",
+    "LocalTransport",
     "MultiTenantEngine",
     "PoolExhausted",
     "PrefixCache",
     "Request",
+    "RoutedRequest",
+    "Router",
     "TokenEvent",
+    "Transport",
     "base_lambda",
+    "build_replicas",
     "extract_lambda",
+    "lam_digest",
     "merge_tenant_params",
+    "payload_nbytes",
     "random_lambda",
     "reference_decode",
 ]

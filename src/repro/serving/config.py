@@ -79,6 +79,11 @@ class EngineConfig:
     watermark: int = 0
     quantum: Optional[int] = None
     cold_slots: int = 0
+    #: mmap-backed cold tier: spill λ rows to this file (catalog JSON rides
+    #: alongside) instead of host arrays, so the spilled tenant catalog —
+    #: rows, LRU order, and prefix-family digests — survives an engine
+    #: restart.  Requires ``cold_slots > 0``.
+    cold_path: Optional[str] = None
     shard_lam: bool = False
     telemetry: bool = True
     #: Chunked-prefill token budget per engine step (paged layouts only).
@@ -126,6 +131,8 @@ class EngineConfig:
             raise ValueError(f"watermark={self.watermark} must be >= 0")
         if self.cold_slots < 0:
             raise ValueError(f"cold_slots={self.cold_slots} must be >= 0")
+        if self.cold_path is not None and self.cold_slots <= 0:
+            raise ValueError("cold_path requires cold_slots > 0 (a tier to back)")
         if self.quantum is not None:
             if self.quantum < 1:
                 raise ValueError(f"quantum={self.quantum} must be >= 1 decode step")

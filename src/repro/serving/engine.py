@@ -285,7 +285,7 @@ class MultiTenantEngine:
         with self._rules_ctx():
             self.lam_store = LamStore.from_params(
                 self.params, n_slots=n_slots, cold_slots=cold_slots,
-                mesh=self._mesh,
+                cold_path=config.cold_path, mesh=self._mesh,
             )
         # tier pressure can drop a tenant without an explicit evict — its
         # prefix-cache family must be reclaimed just as eagerly
@@ -315,6 +315,8 @@ class MultiTenantEngine:
         self._chunkable = cfg.family in _CHUNKABLE_FAMILIES
         # uid → in-flight chunked-prefill progress (_begin_chunked_prefill)
         self._prefilling: Dict[int, Dict[str, Any]] = {}
+        # uid → shipped-prefill payload awaiting admission (inject_prefilled)
+        self._imports: Dict[int, Dict[str, Any]] = {}
         # paged buckets are floored at block_size: block-aligned shapes, one
         # compilation for every sub-block prompt (see _bucket_len)
         self._prefill_floor = (
@@ -476,6 +478,41 @@ class MultiTenantEngine:
             attn = {"k": k, "v": v, "block_tbl": tbl, "idx": a["idx"]}
             return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
 
+        def _import_blocks(cache, ids, kblk, vblk):
+            """Adopt shipped K/V pool blocks (cross-replica prefix import /
+            disaggregated prefill): scatter whole blocks into the slots
+            ``ids``.  The id vector is padded to ``max_blocks`` width so
+            every import shares one compilation; padding entries point at
+            trash block 0 and carry zero rows — clobbering the trash block
+            is the established write-redirect convention."""
+            a = cache["layers"]["attn"]
+            attn = {
+                **a,
+                "k": a["k"].at[:, ids].set(kblk.astype(a["k"].dtype)),
+                "v": a["v"].at[:, ids].set(vblk.astype(a["v"].dtype)),
+            }
+            return {"pos": cache["pos"], "layers": {**cache["layers"], "attn": attn}}
+
+        def _adopt_lane(cache, lane, table_row, length):
+            """Commit an imported (already-resident) prompt into ``lane``:
+            point its table row at the shipped blocks and advance offsets
+            to the true length — ``commit_paged_prefill`` minus the pool
+            adoption (the K/V rows arrived via ``_import_blocks``)."""
+            a = cache["layers"]["attn"]
+            G, _, mb = a["block_tbl"].shape
+            ln = jnp.asarray(length, jnp.int32)
+            pos = jax.lax.dynamic_update_slice(cache["pos"], ln[None], (lane,))
+            tbl = jax.lax.dynamic_update_slice(
+                a["block_tbl"],
+                jnp.broadcast_to(table_row.astype(jnp.int32), (G, 1, mb)),
+                (0, lane, 0),
+            )
+            idx = jax.lax.dynamic_update_slice(
+                a["idx"], jnp.broadcast_to(ln, (G, 1)), (0, lane)
+            )
+            attn = {**a, "block_tbl": tbl, "idx": idx}
+            return {"pos": pos, "layers": {**cache["layers"], "attn": attn}}
+
         spec_k = config.speculate_k
 
         def _draft(view, cache, tok, seg, attend_blocks):
@@ -530,6 +567,8 @@ class MultiTenantEngine:
         self._prefill_chunk_final = self._with_rules(jax.jit(_prefill_chunk_final))
         self._append_block = jax.jit(_append_block)
         self._fork_block = jax.jit(_fork_block)
+        self._import_blocks = jax.jit(_import_blocks)
+        self._adopt_lane = jax.jit(_adopt_lane)
         if spec_k:
             self._draft = self._with_rules(jax.jit(_draft, static_argnums=(4,)))
             self._verify = self._with_rules(jax.jit(_verify, static_argnums=(5,)))
@@ -603,6 +642,20 @@ class MultiTenantEngine:
         slot = self.lam_store.register(tenant, lam_tree)
         self._drop_stale_family(old)
         return slot
+
+    def add_tenants(self, lams: Dict[str, Any]) -> Dict[str, int]:
+        """Batch :meth:`add_tenant`: the whole cohort lands in one donated
+        multi-slot table write (``LamStore.register_many``) — the router's
+        peer-promotion path registers a tenant catalog on a replica without
+        paying one dispatch per tenant."""
+        olds = {
+            t: self.lam_store.digest(t) if t in self.lam_store else None
+            for t in lams
+        }
+        slots = self.lam_store.register_many(lams)
+        for old in olds.values():
+            self._drop_stale_family(old)
+        return slots
 
     def remove_tenant(self, tenant: str) -> None:
         """Drop a tenant from both λ-store tiers (no queued/active work may
@@ -694,15 +747,204 @@ class MultiTenantEngine:
         self.telemetry.on_submit(req)
         return req
 
+    def cancel(self, req: Request) -> None:
+        """Withdraw a request.  A queued one just leaves the queue; an
+        active lane frees its blocks and resets (tokens already delivered
+        stay on the request).  The disaggregated prefill replica's
+        export-then-cancel handoff (serving/router.py) rides on this."""
+        if req.lane >= 0:
+            self._prefilling.pop(req.uid, None)
+            self._imports.pop(req.uid, None)
+            lane = req.lane
+            self.scheduler.finish(req)
+            self.lam_store.unpin(req.tenant)
+            if self._cold_tier:
+                self.lam_store.unprotect(req.tenant)
+            if self.paged:
+                for b in self._lane_blocks.pop(lane):
+                    self.allocator.decref(b)
+                self.cache = self._reset(self.cache, lane)
+            return
+        try:
+            self.scheduler.queue.remove(req)
+        except ValueError:
+            return  # already finished (or never submitted here)
+        self._imports.pop(req.uid, None)
+        if self._cold_tier:
+            self.lam_store.unprotect(req.tenant)
+        else:
+            self.lam_store.unpin(req.tenant)
+
+    # -- multi-replica hooks (serving/replica.py, serving/router.py) --------
+
+    def export_prefix(self, tenant: str, prompt) -> Optional[Dict[str, Any]]:
+        """Package the resident prefix-cache blocks for ``(tenant,
+        prompt)`` as a host payload a sibling replica can
+        :meth:`import_prefix` — full-block K/V only (the partial tail is
+        never cached).  ``None`` when nothing is cached here."""
+        if self.prefix_cache is None or tenant not in self.lam_store:
+            return None
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        blocks = self.prefix_cache.match(
+            self._family_key(tenant, prompt.size), prompt
+        )
+        if not blocks:
+            return None
+        a = self.cache["layers"]["attn"]
+        ids = jnp.asarray(np.asarray(blocks, np.int32))
+        return {
+            "block_size": self.block_size,
+            "n_blocks": len(blocks),
+            "tokens": prompt[: len(blocks) * self.block_size].copy(),
+            "k": np.asarray(a["k"][:, ids]),
+            "v": np.asarray(a["v"][:, ids]),
+        }
+
+    def import_prefix(self, tenant: str, prompt, payload) -> int:
+        """Adopt a sibling replica's exported prefix blocks into this
+        engine's pool + prefix cache (cross-replica prefix sharing).  Only
+        the blocks beyond the local match are imported; LRU cache entries
+        are evicted to make room.  Returns blocks adopted — 0 means nothing
+        new or no room, and the request simply prefills locally (imports
+        are an optimization, never a correctness dependency)."""
+        if self.prefix_cache is None or payload is None:
+            return 0
+        if payload["block_size"] != self.block_size:
+            raise ValueError("sibling replica's block geometry differs")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        fam = self._family_key(tenant, prompt.size)
+        local = self.prefix_cache.match(fam, prompt)
+        n = payload["n_blocks"]
+        take = n - len(local)
+        if take <= 0:
+            return 0
+        while not self.allocator.can_alloc(take) and len(self.prefix_cache):
+            self.prefix_cache.evict_one()
+        if not self.allocator.can_alloc(take):
+            return 0
+        new_ids = self.allocator.alloc(take)
+        self._write_imported_blocks(new_ids, payload, skip=len(local))
+        self.prefix_cache.insert(
+            fam, prompt[: n * self.block_size], local + new_ids
+        )
+        for b in new_ids:
+            self.allocator.decref(b)  # the cache now holds the only ref
+        return take
+
+    def _write_imported_blocks(self, new_ids, payload, *, skip: int) -> None:
+        """Scatter payload blocks ``skip:`` into the freshly allocated pool
+        slots ``new_ids`` via the fixed-width ``_import_blocks`` jit."""
+        take = len(new_ids)
+        ids = np.zeros((self.max_blocks,), np.int32)
+        ids[:take] = new_ids
+        G = payload["k"].shape[0]
+        kb = np.zeros((G, self.max_blocks) + payload["k"].shape[2:],
+                      payload["k"].dtype)
+        vb = np.zeros_like(kb)
+        kb[:, :take] = payload["k"][:, skip: skip + take]
+        vb[:, :take] = payload["v"][:, skip: skip + take]
+        self.cache = self._import_blocks(
+            self.cache, jnp.asarray(ids), jnp.asarray(kb), jnp.asarray(vb)
+        )
+
+    def export_request_state(self, req: Request) -> Dict[str, Any]:
+        """Disaggregation payload for an active request whose prefill has
+        committed (first token emitted): the prompt's K/V blocks bit-exact,
+        the first token's logits row, and the prompt itself — everything a
+        decode replica needs to splice the request into a lane without
+        recompute (:meth:`inject_prefilled`).  The caller cancel()s the
+        request here right after (serving/router.py)."""
+        if not self.paged:
+            raise ValueError("export_request_state needs a paged layout")
+        if req.lane < 0 or not req.tokens or req.uid in self._prefilling:
+            raise ValueError("request has no committed prefill to export")
+        nb = self.allocator.blocks_for(req.prompt.size)
+        blocks = self._lane_blocks[req.lane][:nb]
+        a = self.cache["layers"]["attn"]
+        ids = jnp.asarray(np.asarray(blocks, np.int32))
+        return {
+            "block_size": self.block_size,
+            "prompt": req.prompt.copy(),
+            "n_blocks": len(blocks),
+            "k": np.asarray(a["k"][:, ids]),
+            "v": np.asarray(a["v"][:, ids]),
+            "logits": req.logits[0] if req.logits else None,
+            "token": req.tokens[0],
+        }
+
+    def inject_prefilled(self, tenant: str, prompt, max_new_tokens: int,
+                         payload: Dict[str, Any]) -> Request:
+        """Submit a request whose prefill already ran on a prefill replica:
+        admission splices the shipped blocks into a lane
+        (``_adopt_prefilled``) instead of running the prompt forward — the
+        decode half of prefill/decode disaggregation.  Restricted to
+        chunkable (pure-KV) families: recurrent prompt state cannot ship
+        block-wise."""
+        if not self.paged:
+            raise ValueError("inject_prefilled needs a paged layout")
+        if not self._chunkable:
+            raise ValueError(
+                f"family {self.cfg.family!r} carries recurrent prompt state "
+                "— its prefill cannot be disaggregated"
+            )
+        if payload["block_size"] != self.block_size:
+            raise ValueError("prefill replica's block geometry differs")
+        req = self.submit(tenant, prompt, max_new_tokens)
+        self._imports[req.uid] = payload
+        return req
+
+    def _adopt_prefilled(self, req: Request, payload) -> np.ndarray:
+        """Admission splice of a shipped prefill: adopt locally-cached
+        prefix blocks where present, scatter the remaining shipped blocks
+        into fresh allocations, commit the lane's table row + offsets
+        (``_adopt_lane``), and file the full blocks in the prefix cache.
+        No prompt forward pass runs; returns the first token's logits row."""
+        P, bs = req.prompt.size, self.block_size
+        cached = self._gate_matches.pop(req.uid, [])
+        new_ids = self.allocator.alloc(self.allocator.blocks_for(P) - len(cached))
+        blocks = cached + new_ids
+        self._lane_blocks[req.lane] = blocks
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self._write_imported_blocks(new_ids, payload, skip=len(cached))
+        table_row = np.zeros((self.max_blocks,), np.int32)
+        table_row[: len(blocks)] = blocks
+        self.cache = self._adopt_lane(
+            self.cache, req.lane, jnp.asarray(table_row), np.int32(P)
+        )
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(self._family(req), req.prompt, blocks)
+            self.telemetry.prefix_hits.inc(len(cached))
+            self.telemetry.prefix_misses.inc(P // bs - len(cached))
+        row = payload["logits"]
+        if row is None:
+            if self.collect_logits:
+                raise ValueError(
+                    "decode replica collects logits but the prefill payload "
+                    "carries none — run the prefill replica with "
+                    "collect_logits=True"
+                )
+            # token-only handoff: synthesize a one-hot row so _emit's argmax
+            # reproduces the prefill replica's token
+            row = np.zeros((self.cfg.vocab_size,), np.float32)
+            row[payload["token"]] = 1.0
+        return row
+
     # -- paged block accounting ---------------------------------------------
 
-    def _family(self, req: Request) -> bytes:
+    def _family_key(self, tenant: str, prompt_len: int) -> bytes:
         """Prefix-cache family key: tenant λ digest + prefill bucket.  Two
         prefills may only share K/V blocks when they ran the same adapter
         *and* the same compiled prefill program (same bucket) — that keeps
-        shared-prefix output bit-identical to the unshared engine."""
-        Pb = _bucket_len(req.prompt.size, self.max_len, self._prefill_floor)
-        return self.lam_store.digest(req.tenant) + Pb.to_bytes(4, "little")
+        shared-prefix output bit-identical to the unshared engine.  The key
+        is digest-based, not tenant-name-based, so two replicas serving the
+        same λ derive the same key (cross-replica prefix import relies on
+        it)."""
+        Pb = _bucket_len(prompt_len, self.max_len, self._prefill_floor)
+        return self.lam_store.digest(tenant) + Pb.to_bytes(4, "little")
+
+    def _family(self, req: Request) -> bytes:
+        return self._family_key(req.tenant, req.prompt.size)
 
     def _admission_gate(self):
         """Pool gate for ``scheduler.admit``: approving a request *reserves*
@@ -1011,21 +1253,41 @@ class MultiTenantEngine:
             Pb = _bucket_len(P, self.max_len, self._prefill_floor)
             padded = np.zeros((Pb,), np.int32)
             padded[:P] = req.prompt
-            self.prefill_buckets.add(Pb)
             length = jnp.full((1,), P, jnp.int32)
             t0 = tel.now() if tel.enabled else 0.0
             if self.paged:
+                payload = self._imports.pop(req.uid, None)
+                if payload is not None:
+                    # disaggregated admission: the prompt's K/V was computed
+                    # on a prefill replica and shipped — splice it in, no
+                    # prompt forward pass (serving/router.py)
+                    row = self._adopt_prefilled(req, payload)
+                    if tel.enabled:
+                        tel.on_prefill(req, t0, tel.now())
+                    self._emit(req, row, finished)
+                    continue
+                self.prefill_buckets.add(Pb)
                 if (
                     self.prefill_chunk is not None
                     and self._chunkable
                     and Pb > self.prefill_chunk
+                    and (
+                        P > 2 * self.prefill_chunk
+                        or self._gate_matches.get(req.uid)
+                    )
                 ):
                     # long prompt: allocate its blocks now, stream its
-                    # chunks through the following steps' prefill budget
+                    # chunks through the following steps' prefill budget.
+                    # Short prompts (≤ 2 chunks of work) auto-disable —
+                    # splitting one dispatch into two buys no TBT bound and
+                    # pays a second dispatch — UNLESS a cached prefix lets
+                    # the chunk path skip resident blocks' compute entirely
+                    # (the monolithic path recomputes them into the trash).
                     self._begin_chunked_prefill(req, padded, seg, length, t0)
                     continue
                 logits = self._admit_paged(req, view, padded, seg, length)
             else:
+                self.prefill_buckets.add(Pb)
                 lane_cache = self.model.init_decode_state(
                     1, self.max_len, self.dtype, per_lane=True
                 )
@@ -1046,12 +1308,14 @@ class MultiTenantEngine:
         blocks come later), and prefill block-aligned."""
         P, bs = req.prompt.size, self.block_size
         cached = self._gate_matches.pop(req.uid, [])
-        if self.prefix_cache is not None:
+        if self.prefix_cache is not None and len(cached) < P // bs:
             # re-match: an earlier admission in this round may have filed
             # this very prefix (same-round sharing).  Only *extend* the
             # gate-pinned base — extending allocates less than the gate
             # reserved, never more — and only when the fresh chain agrees
             # with the pinned blocks (eviction races can reshuffle entries).
+            # A gate match already covering every full block skips the
+            # re-walk: there is nothing left to extend.
             fresh = self.prefix_cache.match(self._family(req), req.prompt)
             if len(fresh) > len(cached) and fresh[: len(cached)] == cached:
                 for b in fresh[len(cached):]:
@@ -1098,7 +1362,7 @@ class MultiTenantEngine:
         block and its outputs are discarded."""
         P, bs, C = req.prompt.size, self.block_size, self.prefill_chunk
         cached = self._gate_matches.pop(req.uid, [])
-        if self.prefix_cache is not None:
+        if self.prefix_cache is not None and len(cached) < P // bs:
             # same-round re-match as _admit_paged (extend-only, see there)
             fresh = self.prefix_cache.match(self._family(req), req.prompt)
             if len(fresh) > len(cached) and fresh[: len(cached)] == cached:
@@ -1179,9 +1443,12 @@ class MultiTenantEngine:
                 st["next"] += 1
                 req.prefill_pos = -1 if last else st["starts"][st["next"]]
                 if tel.enabled:
-                    if not last:
-                        # make the span honest: wait for the chunk's scatter
-                        jax.block_until_ready(self.cache["layers"]["attn"]["k"])
+                    # non-final chunk spans measure dispatch cost only: a
+                    # forced per-chunk device sync would serialize the very
+                    # prefill/decode overlap chunking exists to create (and
+                    # showed up as the chunked-on > chunked-off regression
+                    # in BENCH_smoke).  The final chunk's logits sync fences
+                    # the whole chunk sequence, so total cost stays honest.
                     tel.on_prefill_chunk(req, t0, tel.now(), start, C)
                 if last:
                     self._finish_chunked(st, req, row, finished)
@@ -1239,13 +1506,18 @@ class MultiTenantEngine:
                 self.cache = self._reset(self.cache, lane)
             finished.append(req)
 
-    def step(self) -> List[Request]:
-        """Time-slice over-quantum lanes (when work queues), admit waiting
-        requests, advance chunked prefills under the token budget, grow/
-        CoW-fork lanes crossing block boundaries, run one shared decode step
-        over the committed lanes (a draft+verify pair when ``speculate_k``
-        is set — up to k+1 tokens per lane per step); returns requests that
-        finished this step.  Per-token events land in ``self.events``."""
+    def step_begin(self) -> Dict[str, Any]:
+        """First half of :meth:`step`: quantum time-slicing, admission,
+        chunked-prefill advance, lane growth, and the decode *dispatch* —
+        everything up to (but not including) the host sync on the decode
+        logits.  Returns a pending handle for :meth:`step_finish`.
+
+        The split exists for multi-replica drivers (serving/router.py):
+        dispatching every replica's decode before syncing any lets the
+        replicas' device work overlap instead of serializing on each host
+        round-trip.  Speculative steps host-sync internally (draft feeds
+        verify), so they complete inside ``step_begin`` and return an
+        already-finished handle."""
         finished: List[Request] = []
         self.events = []
         tel = self.telemetry
@@ -1294,7 +1566,7 @@ class MultiTenantEngine:
             else active
         )
         if not decoding:
-            return finished
+            return {"finished": finished, "decoding": None}
         tok = np.zeros((self.n_lanes, 1), np.int32)
         for req in decoding:
             tok[req.lane, 0] = req.tokens[-1]
@@ -1319,7 +1591,7 @@ class MultiTenantEngine:
             ab = min(ab, self.max_blocks)
         if self.speculate_k:
             self._step_speculative(decoding, tok, ab, finished, t)
-            return finished
+            return {"finished": finished, "decoding": None}
         seg = jnp.asarray(self.scheduler.batch_composition())
         view = self._params_view()
         t_disp = tel.now() if on else 0.0
@@ -1328,12 +1600,28 @@ class MultiTenantEngine:
             now = tel.now()
             tel.phase("dispatch", now - t_disp)
             t = now
-        logits_np = np.asarray(logits)  # host sync: the decode really ran
+        return {
+            "finished": finished, "decoding": decoding, "logits": logits,
+            "t_disp": t_disp, "t": t,
+        }
+
+    def step_finish(self, pending: Dict[str, Any]) -> List[Request]:
+        """Second half of :meth:`step`: host-sync the dispatched decode
+        logits and emit each decoding lane's token.  Idempotent-free — call
+        exactly once per :meth:`step_begin`."""
+        finished = pending["finished"]
+        decoding = pending["decoding"]
+        if decoding is None:
+            return finished
+        tel = self.telemetry
+        on = tel.enabled
+        logits_np = np.asarray(pending["logits"])  # host sync: decode ran
         t_sync = 0.0
         if on:
             t_sync = tel.now()
-            tel.phase("sync", t_sync - t)
+            tel.phase("sync", t_sync - pending["t"])
         self.steps += 1
+        t_disp = pending["t_disp"]
         for req in decoding:
             req.slice_steps += 1
             self._emit(req, logits_np[req.lane], finished)
@@ -1342,6 +1630,17 @@ class MultiTenantEngine:
         if on:
             tel.phase("emit", tel.now() - t_sync)
         return finished
+
+    def step(self) -> List[Request]:
+        """Time-slice over-quantum lanes (when work queues), admit waiting
+        requests, advance chunked prefills under the token budget, grow/
+        CoW-fork lanes crossing block boundaries, run one shared decode step
+        over the committed lanes (a draft+verify pair when ``speculate_k``
+        is set — up to k+1 tokens per lane per step); returns requests that
+        finished this step.  Per-token events land in ``self.events``.
+        Exactly ``step_finish(step_begin())`` — multi-replica drivers call
+        the halves directly to pipeline dispatches across replicas."""
+        return self.step_finish(self.step_begin())
 
     def run(self) -> Dict[int, Request]:
         """Drain the queue; returns uid → finished request."""

@@ -41,9 +41,11 @@ A) is shared with the input forever.
 from __future__ import annotations
 
 import hashlib
+import json
 import math
+import os
 from collections import OrderedDict
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +73,18 @@ def _lam_digest(flat: Dict[Tuple[str, str], Any]) -> bytes:
         h.update(repr((key, leaf.shape)).encode())
         h.update(np.ascontiguousarray(leaf).tobytes())
     return h.digest()
+
+
+def lam_digest(lam_tree: Dict[str, Dict[str, Any]]) -> bytes:
+    """Content hash of a nested ``{module: {proj: λ}}`` tree — identical to
+    the digest :meth:`LamStore.register` assigns, computable *without* a
+    store.  The multi-replica router (serving/router.py) places requests by
+    this digest before the tenant is registered on any replica."""
+    return _lam_digest({
+        (mod, proj): leaf
+        for mod, projs in lam_tree.items()
+        for proj, leaf in projs.items()
+    })
 
 
 def extract_lambda(params: Pytree) -> Dict[str, Dict[str, jax.Array]]:
@@ -111,6 +125,149 @@ def _extract_slot_impl(tables, zero_rows, slot):
     return rows, _write_slot_impl(tables, zero_rows, slot)
 
 
+def _write_slots_impl(tables, rows, slots):
+    """k λ rows written across every table in ONE donated call — the batch
+    register/promote path for mass-admission spikes.  ``slots`` (k,) may
+    repeat an index only with identical rows (the power-of-two padding
+    repeats the last entry, so the duplicate scatter is a no-op)."""
+    out = {}
+    for key, tab in tables.items():
+        out[key] = tab.at[..., slots, :].set(rows[key].astype(tab.dtype))
+    return out
+
+
+def _extract_slots_impl(tables, zero_rows, slots):
+    """Read k λ rows out of every table, then scrub the slots to zero —
+    the batched spill, one call."""
+    rows = {key: jnp.take(tab, slots, axis=-2) for key, tab in tables.items()}
+    return rows, _write_slots_impl(tables, zero_rows, slots)
+
+
+class MmapColdTier:
+    """Restart-surviving cold tier: λ rows in an mmap-backed record file.
+
+    Drop-in for the in-memory ``OrderedDict`` cold tier (same mapping
+    surface: membership, LRU-ordered iteration coldest-first, ``pop`` /
+    ``__setitem__`` / ``move_to_end``).  Every tenant's λ rows flatten into
+    one fixed-size fp32 record of the data file; the tenant → record
+    catalog (LRU order, per-tenant λ digests) persists as a JSON sidecar
+    next to it.  A restarted server passing the same ``cold_path`` to
+    :class:`LamStore` reopens both and finds its spilled tenant catalog
+    intact — digests included, so prefix-sharing family identity survives
+    the restart too."""
+
+    def __init__(
+        self,
+        path: str,
+        lam_shapes: Dict[Tuple[str, str], Tuple[int, ...]],
+        capacity: int,
+    ):
+        self.path = str(path)
+        self.catalog_path = self.path + ".json"
+        self._keys = sorted(lam_shapes)
+        self._shapes = {k: tuple(lam_shapes[k]) for k in self._keys}
+        self._sizes = [int(np.prod(self._shapes[k])) for k in self._keys]
+        self._row_floats = int(sum(self._sizes))
+        self.capacity = int(capacity)
+        # tenant → (record index, digest hex); insertion order IS LRU order
+        self._index: "OrderedDict[str, Tuple[int, str]]" = OrderedDict()
+        self._free: List[int] = []
+        if os.path.exists(self.catalog_path):
+            self._load_catalog()
+        else:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+            self._free = list(range(self.capacity - 1, -1, -1))
+        mode = "r+" if os.path.exists(self.path) else "w+"
+        self._mm = np.memmap(
+            self.path, np.float32, mode=mode,
+            shape=(self.capacity, max(self._row_floats, 1)),
+        )
+
+    def _schema(self) -> list:
+        return [[list(k), list(self._shapes[k])] for k in self._keys]
+
+    def _load_catalog(self) -> None:
+        with open(self.catalog_path) as f:
+            cat = json.load(f)
+        if cat["schema"] != self._schema():
+            raise ValueError(
+                f"cold catalog {self.catalog_path} was written for a "
+                "different λ schema (other model or adapter config)"
+            )
+        # the record file's geometry wins; a larger requested capacity
+        # grows the file, a smaller one is ignored (records would dangle)
+        stored = int(cat["capacity"])
+        grown = list(range(self.capacity - 1, stored - 1, -1))
+        self.capacity = max(self.capacity, stored)
+        self._free = grown + [int(i) for i in cat["free"]]
+        for tenant, rec, dg in cat["tenants"]:
+            self._index[tenant] = (int(rec), dg)
+
+    def _save(self) -> None:
+        cat = {
+            "schema": self._schema(),
+            "capacity": self.capacity,
+            "tenants": [[t, rec, dg] for t, (rec, dg) in self._index.items()],
+            "free": self._free,
+        }
+        tmp = self.catalog_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cat, f)
+        os.replace(tmp, self.catalog_path)  # atomic: never a torn catalog
+
+    def digests(self) -> Dict[str, bytes]:
+        """Per-tenant λ digests restored from the catalog (LamStore seeds
+        its digest refcounts from this on reopen)."""
+        return {t: bytes.fromhex(dg) for t, (_, dg) in self._index.items()}
+
+    # -- the OrderedDict surface LamStore drives ----------------------------
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._index
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._index)
+
+    def pop(self, tenant: str, *default):
+        if tenant not in self._index:
+            if default:
+                return default[0]
+            raise KeyError(tenant)
+        rec, _ = self._index.pop(tenant)
+        flat = np.array(self._mm[rec])  # copy out before the record recycles
+        self._free.append(rec)
+        self._save()
+        rows, off = {}, 0
+        for key, size in zip(self._keys, self._sizes):
+            rows[key] = flat[off: off + size].reshape(self._shapes[key])
+            off += size
+        return rows
+
+    def __setitem__(self, tenant: str, rows) -> None:
+        if tenant in self._index:
+            rec, _ = self._index.pop(tenant)
+        elif self._free:
+            rec = self._free.pop()
+        else:
+            # unreachable through LamStore (its cold-room accounting runs
+            # first) — guard direct misuse
+            raise RuntimeError(f"mmap cold tier full (capacity={self.capacity})")
+        rows = {k: np.asarray(rows[k], np.float32) for k in self._keys}
+        self._mm[rec] = np.concatenate(
+            [rows[k].reshape(-1) for k in self._keys]
+        ) if self._row_floats else 0.0
+        self._mm.flush()
+        self._index[tenant] = (rec, _lam_digest(rows).hex())
+        self._save()
+
+    def move_to_end(self, tenant: str) -> None:
+        self._index.move_to_end(tenant)
+        self._save()
+
+
 class LamStore:
     """Hierarchical λ-pool: hot device slots + host cold tier, LRU/pinning,
     hot-swap, O(one λ row) slot writes, optional mesh-sharded tables.
@@ -136,6 +293,7 @@ class LamStore:
         n_slots: int = 8,
         *,
         cold_slots: int = 0,
+        cold_path: Optional[str] = None,
         mesh=None,
     ):
         assert n_slots >= 2, "need slot 0 (base) plus at least one tenant slot"
@@ -164,8 +322,16 @@ class LamStore:
         self._pins: Dict[str, int] = {BASE_TENANT: 1}
         self._protect: Dict[str, int] = {}
         self._free = list(range(n_slots - 1, 0, -1))
-        # cold tier: tenant → {key: np λ row}, LRU order (coldest first)
-        self._cold: "OrderedDict[str, Dict[Tuple[str, str], np.ndarray]]" = OrderedDict()
+        # cold tier: tenant → {key: np λ row}, LRU order (coldest first).
+        # With cold_path the tier is mmap-backed and restart-surviving
+        # (MmapColdTier exposes the same mapping surface).
+        if cold_path is not None:
+            if cold_slots <= 0:
+                raise ValueError("cold_path requires cold_slots > 0")
+            self._cold: Any = MmapColdTier(cold_path, self._lam_shapes, cold_slots)
+            self.cold_slots = self._cold.capacity  # file geometry wins
+        else:
+            self._cold = OrderedDict()
         self.version = 0  # bumped on any *device table* mutation (view key)
         # tenant → λ content hash (the prefix-sharing family id) + refcounts
         # per digest so the engine can tell when a family went extinct; the
@@ -177,10 +343,17 @@ class LamStore:
             BASE_TENANT,
             _lam_digest({k: np.zeros(s, np.float32) for k, s in self._lam_shapes.items()}),
         )
+        if isinstance(self._cold, MmapColdTier):
+            # reopened catalog: spilled tenants are already resident — seed
+            # their digests so family identity survives the restart
+            for tenant, dg in self._cold.digests().items():
+                self._digest_add(tenant, dg)
         # per-instance jits: donated tables, one executable per store so the
         # compile/alloc counters below are attributable in tests
         self._write = jax.jit(_write_slot_impl, donate_argnums=(0,))
         self._extract = jax.jit(_extract_slot_impl, donate_argnums=(0,))
+        self._write_batch = jax.jit(_write_slots_impl, donate_argnums=(0,))
+        self._extract_batch = jax.jit(_extract_slots_impl, donate_argnums=(0,))
         self.slot_writes = 0  # donated device calls (register/spill/evict/promote)
         self.spills = 0  # hot → cold demotions
         self.promotes = 0  # cold → hot promotions
@@ -336,6 +509,52 @@ class LamStore:
         self.version += 1
         return {k: np.asarray(v) for k, v in jax.device_get(rows).items()}
 
+    @staticmethod
+    def _pad_pow2(slots: List[int]) -> np.ndarray:
+        """Slot index vector padded to a power of two by repeating the last
+        entry — spike sizes then share a handful of compilations, and the
+        duplicate scatter rewrites an identical row (a no-op)."""
+        kp = 1
+        while kp < len(slots):
+            kp *= 2
+        return np.asarray(list(slots) + [slots[-1]] * (kp - len(slots)), np.int32)
+
+    def _write_slots(self, slots: List[int], rows_list) -> None:
+        """Batched :meth:`_write_slot`: k λ rows land in k slots in ONE
+        donated device call (mass-admission spikes, router peer promotion)."""
+        idx = self._pad_pow2(slots)
+        batch = {}
+        for key in self._lam_shapes:
+            stack = np.stack(
+                [np.asarray(r[key], np.float32) for r in rows_list], axis=-2
+            )
+            if len(idx) != len(slots):
+                pad = np.repeat(stack[..., -1:, :], len(idx) - len(slots), axis=-2)
+                stack = np.concatenate([stack, pad], axis=-2)
+            batch[key] = stack
+        self._tables = self._write_batch(self._tables, batch, jnp.asarray(idx))
+        self.slot_writes += 1
+        self.version += 1
+
+    def _extract_slots(self, slots: List[int]) -> List[Dict[Tuple[str, str], np.ndarray]]:
+        """Batched :meth:`_extract_rows`: k λ rows leave the device (their
+        slots scrubbed to zero) in one donated call."""
+        idx = self._pad_pow2(slots)
+        zeros = {
+            key: np.zeros((*s[:-1], len(idx), s[-1]), np.float32)
+            for key, s in self._lam_shapes.items()
+        }
+        rows, self._tables = self._extract_batch(
+            self._tables, zeros, jnp.asarray(idx)
+        )
+        self.slot_writes += 1
+        self.version += 1
+        host = {k: np.asarray(v) for k, v in jax.device_get(rows).items()}
+        return [
+            {k: np.ascontiguousarray(host[k][..., i, :]) for k in host}
+            for i in range(len(slots))
+        ]
+
     # -- tiering ------------------------------------------------------------
 
     def _make_cold_room(self) -> bool:
@@ -428,9 +647,10 @@ class LamStore:
 
     # -- registration / hot-swap -------------------------------------------
 
-    def register(self, tenant: str, lam_tree: Dict[str, Dict[str, jax.Array]]) -> int:
-        """Load (or hot-swap) a tenant's λ; returns its hot slot id, or
-        :data:`COLD_SLOT` when it landed in the host cold tier."""
+    def _validate(
+        self, tenant: str, lam_tree: Dict[str, Dict[str, jax.Array]]
+    ) -> Tuple[Dict[Tuple[str, str], np.ndarray], bytes]:
+        """Shape-check a λ tree and flatten it to host rows + digest."""
         if tenant == BASE_TENANT:
             raise ValueError("slot 0 (base tenant) is immutable")
         flat = {
@@ -447,7 +667,20 @@ class LamStore:
             if tuple(leaf.shape) != want:
                 raise ValueError(f"λ[{key}] shape {leaf.shape} != {want}")
         rows = {k: np.asarray(v, np.float32) for k, v in flat.items()}
-        dg = _lam_digest(rows)
+        return rows, _lam_digest(rows)
+
+    def _exhausted(self) -> RuntimeError:
+        return RuntimeError(
+            f"λ-pool exhausted: all {self.n_slots} slots pinned by in-flight "
+            f"requests and the cold tier is "
+            f"{'full' if self.cold_slots else 'disabled'} "
+            "(raise n_slots/cold_slots or drain the queue)"
+        )
+
+    def register(self, tenant: str, lam_tree: Dict[str, Dict[str, jax.Array]]) -> int:
+        """Load (or hot-swap) a tenant's λ; returns its hot slot id, or
+        :data:`COLD_SLOT` when it landed in the host cold tier."""
+        rows, dg = self._validate(tenant, lam_tree)
         if tenant in self and (
             self._pins.get(tenant, 0) or self._protect.get(tenant, 0)
         ):
@@ -476,17 +709,118 @@ class LamStore:
                 self._digest_add(tenant, dg)
                 self.cold_registers += 1
                 return COLD_SLOT
-            raise RuntimeError(
-                f"λ-pool exhausted: all {self.n_slots} slots pinned by in-flight "
-                f"requests and the cold tier is "
-                f"{'full' if self.cold_slots else 'disabled'} "
-                "(raise n_slots/cold_slots or drain the queue)"
-            )
+            raise self._exhausted()
         self._write_slot(slot, rows)
         self._slots[tenant] = slot
         self._slots.move_to_end(tenant)
         self._digest_add(tenant, dg)
         return slot
+
+    def register_many(
+        self, lam_trees: Dict[str, Dict[str, Dict[str, jax.Array]]]
+    ) -> Dict[str, int]:
+        """Batch :meth:`register`: every *new* tenant's λ row lands on the
+        device in one donated multi-slot write — a mass-admission spike (or
+        the router shipping a tenant cohort to a replica) costs one
+        dispatch, not one per tenant.  Already-resident tenants take the
+        single-tenant hot-swap path (its in-flight guards apply).  Returns
+        tenant → hot slot id or :data:`COLD_SLOT`."""
+        result: Dict[str, int] = {}
+        fresh = []
+        for tenant, tree in lam_trees.items():
+            if tenant in self:
+                result[tenant] = self.register(tenant, tree)
+            else:
+                fresh.append((tenant, *self._validate(tenant, tree)))
+        slots: List[int] = []
+        rows_list = []
+        for tenant, rows, dg in fresh:
+            slot = self._free.pop() if self._free else self._try_evict_lru()
+            if slot is None:
+                if not self._make_cold_room():
+                    if slots:  # land what already got slots first
+                        self._write_slots(slots, rows_list)
+                        slots = []
+                    raise self._exhausted()
+                self._cold[tenant] = rows
+                self._digest_add(tenant, dg)
+                self.cold_registers += 1
+                result[tenant] = COLD_SLOT
+                continue
+            slots.append(slot)
+            rows_list.append(rows)
+            self._slots[tenant] = slot
+            self._slots.move_to_end(tenant)
+            self._digest_add(tenant, dg)
+            result[tenant] = slot
+        if slots:
+            self._write_slots(slots, rows_list)
+        return result
+
+    def promote_many(self, tenants: Iterable[str]) -> Dict[str, Optional[int]]:
+        """Batch :meth:`promote`: every promotable cold tenant's row lands
+        hot in one donated multi-slot write.  Per-tenant results mirror
+        ``promote()`` — slot id, or None when no hot slot could be freed
+        (the tenant stays cold; the caller defers)."""
+        result: Dict[str, Optional[int]] = {}
+        slots: List[int] = []
+        rows_list = []
+        for tenant in dict.fromkeys(tenants):
+            if tenant in self._slots:
+                result[tenant] = self.lookup(tenant)
+                continue
+            rows = self._cold.pop(tenant, None)
+            if rows is None:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            slot = self._free.pop() if self._free else self._try_evict_lru()
+            if slot is None:
+                self._cold[tenant] = rows  # deferred: back into the cold tier
+                result[tenant] = None
+                continue
+            slots.append(slot)
+            rows_list.append(rows)
+            self._slots[tenant] = slot
+            self._slots.move_to_end(tenant)
+            self.promotes += 1
+            result[tenant] = slot
+        if slots:
+            self._write_slots(slots, rows_list)
+        return result
+
+    def spill_many(self, tenants: Iterable[str]) -> None:
+        """Batch :meth:`spill`: all victims' λ rows leave the device in one
+        extract+scrub call.  Cold-tier room for the whole cohort is checked
+        up front, so the batch either fully lands or raises before any slot
+        is scrubbed."""
+        victims: List[str] = []
+        for tenant in dict.fromkeys(tenants):
+            if tenant == BASE_TENANT:
+                raise ValueError("slot 0 (base tenant) cannot be spilled")
+            if tenant in self._cold:
+                continue
+            if tenant not in self._slots:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            if self._pins.get(tenant, 0):
+                raise RuntimeError(f"tenant {tenant!r} is pinned by an active lane")
+            victims.append(tenant)
+        if not victims:
+            return
+        droppable = sum(
+            1 for t in self._cold
+            if not (self._protect.get(t, 0) or self._pins.get(t, 0))
+        )
+        if self.cold_slots - len(self._cold) + droppable < len(victims):
+            raise RuntimeError(
+                f"cold tier cannot absorb {len(victims)} spills "
+                f"(cold_slots={self.cold_slots})"
+            )
+        slots = [self._slots.pop(t) for t in victims]
+        for tenant, slot, rows in zip(victims, slots, self._extract_slots(slots)):
+            self._make_cold_room()  # cannot fail: room was pre-checked
+            self._cold[tenant] = rows
+            self._cold.move_to_end(tenant)
+            self._free.append(slot)
+            self.spills += 1
 
     def evict(self, tenant: str) -> None:
         """Explicitly drop a tenant from both tiers (must not be pinned or

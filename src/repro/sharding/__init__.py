@@ -5,4 +5,5 @@ from repro.sharding.rules import (  # noqa: F401
     get_mesh,
     shard,
     param_sharding_rules,
+    replica_device_groups,
 )

@@ -256,3 +256,27 @@ def param_sharding_rules(params_shapes: Any) -> Any:
         spec = _spec_for_path(keys, leaf.shape)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replica_device_groups(n: int) -> "list":
+    """Partition the local devices into ``n`` per-replica groups — the
+    placement seam for the multi-replica serving tier (serving/replica.py).
+
+    Replicas are data-parallel copies of the whole engine, so they split
+    the device pool along what would be the mesh *data* axis: with ``d``
+    devices, replica ``i`` owns devices ``i*d//n : (i+1)*d//n``.  With
+    fewer devices than replicas (the single-host CPU smoke case) every
+    group falls back to the full device list — replicas then time-share
+    devices, and the scaling win comes from cache locality rather than
+    parallel compute.  Cross-host layouts later swap this for a
+    process-spanning partition without touching the replica tier.
+    """
+    if n < 1:
+        raise ValueError(f"n={n} must be >= 1")
+    devices = jax.devices()
+    if len(devices) < n:
+        return [list(devices) for _ in range(n)]
+    return [
+        list(devices[i * len(devices) // n: (i + 1) * len(devices) // n])
+        for i in range(n)
+    ]

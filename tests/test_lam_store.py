@@ -185,6 +185,137 @@ def test_protect_blocks_drop_but_allows_spill():
 
 
 # ---------------------------------------------------------------------------
+# batch register/promote/spill: one donated multi-slot dispatch per cohort
+# ---------------------------------------------------------------------------
+
+
+def test_register_many_single_dispatch_bit_identical():
+    """A mass-admission cohort (or the router shipping a tenant set to a
+    replica) lands in ONE donated multi-slot write, rows bit-exact."""
+    store = LamStore(SHAPES, n_slots=6)
+    writes0 = store.slot_writes
+    vals = {f"t{i}": float(i + 1) * 0.31 for i in range(4)}
+    slots = store.register_many({t: _lam_tree(v) for t, v in vals.items()})
+    assert store.slot_writes == writes0 + 1, "batch register must be ONE write"
+    tab = np.asarray(store.tables[("attn", "wq")])
+    for t, v in vals.items():
+        assert store.is_hot(t)
+        np.testing.assert_array_equal(tab[slots[t]], np.full((3, 8), v, np.float32))
+        assert store.digest(t) == _lam_digest(_flat(_lam_tree(v)))
+    np.testing.assert_array_equal(tab[0], 0.0, err_msg="slot 0 mutated")
+
+
+def test_register_many_overflow_lands_cold_and_guards_in_flight():
+    store = LamStore(SHAPES, n_slots=3, cold_slots=2)
+    store.register("a", _lam_tree(1.0))
+    store.register("b", _lam_tree(2.0))
+    store.pin("a")
+    store.pin("b")
+    # every hot slot pinned: the fresh cohort overflows to the cold tier
+    res = store.register_many({"c": _lam_tree(3.0), "d": _lam_tree(4.0)})
+    assert res == {"c": COLD_SLOT, "d": COLD_SLOT}
+    assert store.cold_registers == 2
+    # resident tenants go through the single-tenant hot-swap path, whose
+    # in-flight guards still apply inside a batch
+    with pytest.raises(RuntimeError, match="in-flight"):
+        store.register_many({"a": _lam_tree(9.0)})
+
+
+def test_spill_many_promote_many_roundtrip_single_dispatch():
+    store = LamStore(SHAPES, n_slots=5, cold_slots=4)
+    vals = {f"t{i}": float(i + 7) / 3.0 for i in range(4)}
+    store.register_many({t: _lam_tree(v) for t, v in vals.items()})
+    writes0 = store.slot_writes
+    store.spill_many(vals)
+    assert store.slot_writes == writes0 + 1, "batch spill must be ONE extract"
+    assert all(store.is_cold(t) for t in vals)
+    # scrubbed slots are base-safe until overwritten
+    np.testing.assert_array_equal(np.asarray(store.tables[("attn", "wq")]), 0.0)
+    back = store.promote_many(vals)
+    assert store.slot_writes == writes0 + 2, "batch promote must be ONE write"
+    tab = np.asarray(store.tables[("attn", "wq")])
+    for t, v in vals.items():
+        assert store.is_hot(t)
+        np.testing.assert_array_equal(tab[back[t]], np.full((3, 8), v, np.float32))
+
+
+def test_spill_many_prechecks_room_and_pins_before_touching_slots():
+    store = LamStore(SHAPES, n_slots=4, cold_slots=1)
+    for i in range(3):
+        store.register(f"t{i}", _lam_tree(float(i + 1)))
+    writes0 = store.slot_writes
+    with pytest.raises(RuntimeError, match="cannot absorb"):
+        store.spill_many(["t0", "t1", "t2"])  # cold tier holds only one
+    assert store.slot_writes == writes0, "failed batch spill touched the device"
+    assert all(store.is_hot(f"t{i}") for i in range(3))
+    store.pin("t0")
+    with pytest.raises(RuntimeError, match="pinned"):
+        store.spill_many(["t0"])
+
+
+def test_promote_many_defers_when_every_hot_slot_is_pinned():
+    store = LamStore(SHAPES, n_slots=3, cold_slots=2)
+    store.register("a", _lam_tree(1.0))
+    store.register("b", _lam_tree(2.0))
+    store.spill("a")
+    store.register("c", _lam_tree(3.0))
+    store.pin("b")
+    store.pin("c")
+    assert store.promote_many(["a"]) == {"a": None}
+    assert store.is_cold("a"), "deferred promotion must leave the tenant cold"
+    store.unpin("b")
+    assert store.promote_many(["a"])["a"] is not None and store.is_hot("a")
+
+
+# ---------------------------------------------------------------------------
+# mmap cold tier: the spilled-tenant catalog survives a restart
+# ---------------------------------------------------------------------------
+
+
+def test_mmap_cold_tier_survives_restart(tmp_path):
+    path = str(tmp_path / "cold.lam")
+    vals = {f"t{i}": float(i + 1) * 0.41 for i in range(4)}
+    store = LamStore(SHAPES, n_slots=3, cold_slots=4, cold_path=path)
+    for t, v in vals.items():
+        store.register(t, _lam_tree(v))  # overflow spills t0, t1 to disk
+    assert store.is_cold("t0") and store.is_cold("t1")
+    cold_before = set(store.cold_tenants)
+    digests = {t: store.digest(t) for t in cold_before}
+    del store
+    # a restarted server reopens the same path: catalog, digests, rows intact
+    store2 = LamStore(SHAPES, n_slots=3, cold_slots=4, cold_path=path)
+    assert set(store2.cold_tenants) == cold_before
+    for t in sorted(cold_before):
+        assert store2.digest(t) == digests[t] == _lam_digest(
+            _flat(_lam_tree(vals[t]))
+        ), "family identity lost across restart"
+        slot = store2.promote(t)
+        np.testing.assert_array_equal(
+            np.asarray(store2.tables[("attn", "wq")])[slot],
+            np.full((3, 8), vals[t], np.float32),
+            err_msg=f"λ row of {t} corrupted across restart",
+        )
+
+
+def test_mmap_cold_tier_rejects_schema_mismatch(tmp_path):
+    path = str(tmp_path / "cold.lam")
+    store = LamStore(SHAPES, n_slots=3, cold_slots=2, cold_path=path)
+    store.register("a", _lam_tree(1.0))
+    store.spill("a")
+    del store
+    other = {("attn", "wq"): (3, 8)}  # another model's λ schema
+    with pytest.raises(ValueError, match="schema"):
+        LamStore(other, n_slots=3, cold_slots=2, cold_path=path)
+
+
+def test_cold_path_requires_cold_slots(tmp_path):
+    with pytest.raises(ValueError, match="cold_slots"):
+        LamStore(SHAPES, n_slots=3, cold_path=str(tmp_path / "c.lam"))
+    with pytest.raises(ValueError, match="cold_slots"):
+        EngineConfig(cold_path=str(tmp_path / "c.lam"))
+
+
+# ---------------------------------------------------------------------------
 # property test: random op traffic preserves every λ-store invariant
 # ---------------------------------------------------------------------------
 
